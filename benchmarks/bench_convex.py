@@ -1,0 +1,85 @@
+"""Figures 1-4: distributed SGD and SVRG on l2-regularized logistic
+regression, GSpar vs UniSp vs dense baseline, across the paper's data
+sparsity grid (C1 in {0.6, 0.9}; C2 in {1/4, 1/64}).
+
+Validation targets (paper claims):
+  * var(GSpar) < var(UniSp) at equal density — the optimal-p claim;
+  * GSpar converges close to the dense baseline in data passes;
+  * sparser data (smaller C1/C2) => smaller sparsified-gradient variance;
+  * SVRG degrades only slightly under sparsification.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_json, timed_us
+from repro.data.synthetic import logreg_data
+from repro.experiments import convex
+
+
+def _final(r):
+    return float(r.subopt[-1])
+
+
+def run(quick: bool = False):
+    rows, payload = [], {}
+    n, d = (512, 512) if quick else (1024, 2048)
+    epochs = 10 if quick else 30
+    rho = 0.05
+    grid = [(0.6, 0.25), (0.6, 1.0 / 64), (0.9, 0.25), (0.9, 1.0 / 64)]
+    for c1, c2 in grid:
+        x, y, _ = logreg_data(0, n=n, d=d, c1=c1, c2=c2)
+        lam2 = 1.0 / n
+        _, f_star = convex.solve_reference(x, y, lam2)
+        runs = {}
+        for method in ("dense", "gspar", "unisp"):
+            r = convex.run_sgd(x, y, lam2, method=method, rho=rho,
+                               epochs=epochs, f_star=f_star)
+            runs[method] = r
+        key = f"sgd_c1{c1}_c2{c2:.4f}"
+        payload[key] = {m: {"passes": r.passes.tolist(),
+                            "subopt": r.subopt.tolist(),
+                            "bits": r.bits.tolist(),
+                            "var": r.var_ratio} for m, r in runs.items()}
+        derived = (f"var_gspar={runs['gspar'].var_ratio:.2f};"
+                   f"var_unisp={runs['unisp'].var_ratio:.2f};"
+                   f"subopt_gspar={_final(runs['gspar']):.2e};"
+                   f"subopt_dense={_final(runs['dense']):.2e}")
+        rows.append((f"fig1_2:{key}", 0.0, derived))
+
+    # SVRG on one weak + one strong sparsity setting (figs 3-4). The paper's
+    # SVRG panels use milder sparsity (spa ~0.1-0.3) where var stays ~2x and
+    # the degradation is small — match that regime.
+    rho_svrg = 0.2
+    for c1, c2 in ((0.6, 0.25), (0.9, 1.0 / 64)):
+        x, y, _ = logreg_data(1, n=n, d=d, c1=c1, c2=c2)
+        lam2 = 1.0 / n
+        _, f_star = convex.solve_reference(x, y, lam2)
+        runs = {}
+        for method in ("dense", "gspar", "unisp"):
+            r = convex.run_svrg(x, y, lam2, method=method, rho=rho_svrg,
+                                outer=4 if quick else 10, f_star=f_star)
+            runs[method] = r
+        key = f"svrg_c1{c1}_c2{c2:.4f}"
+        payload[key] = {m: {"passes": r.passes.tolist(),
+                            "subopt": r.subopt.tolist(),
+                            "bits": r.bits.tolist(),
+                            "var": r.var_ratio} for m, r in runs.items()}
+        derived = (f"subopt_gspar={_final(runs['gspar']):.2e};"
+                   f"subopt_unisp={_final(runs['unisp']):.2e};"
+                   f"subopt_dense={_final(runs['dense']):.2e}")
+        rows.append((f"fig3_4:{key}", 0.0, derived))
+
+    # time one sgd step for the us_per_call column
+    x, y, _ = logreg_data(0, n=n, d=d, c1=0.6, c2=0.25)
+    us = timed_us(lambda: convex.run_sgd(x, y, 1.0 / n, method="gspar",
+                                         epochs=1, rho=rho), iters=1)
+    rows = [(nm, us if i == 0 else 0.0, dv) for i, (nm, _, dv) in enumerate(rows)]
+    save_json("convex", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(quick=True))

@@ -1,0 +1,54 @@
+"""Deliverables e+g: render the dry-run/roofline table from cached results
+(results/dryrun/*.json, produced by repro.launch.dryrun_driver). This bench
+does not lower anything itself — it validates and summarizes the sweep."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save_json
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN", "results/dryrun")
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = False):
+    recs = load_records()
+    rows = []
+    ok = skipped = failed = 0
+    for r in recs:
+        st = r.get("status")
+        if st == "ok":
+            ok += 1
+            derived = (f"dominant={r['dominant']};"
+                       f"compute_s={r['compute_s']:.3g};"
+                       f"memory_s={r['memory_s']:.3g};"
+                       f"collective_s={r['collective_s']:.3g};"
+                       f"peak_gb={r['memory_analysis']['peak_gb']:.1f};"
+                       f"useful={r.get('useful_ratio', 0):.2f}")
+        elif st == "skipped":
+            skipped += 1
+            derived = f"skipped:{r.get('reason', '')[:60]}"
+        else:
+            failed += 1
+            derived = f"FAILED:{str(r.get('error', ''))[:80]}"
+        rows.append((f"dryrun:{r['arch']}:{r['shape']}:{r.get('mesh', '?')}",
+                     float(r.get("compile_s", 0)) * 1e6, derived))
+    rows.append(("dryrun:summary", 0.0,
+                 f"ok={ok};skipped={skipped};failed={failed}"))
+    save_json("dryrun_summary", {"ok": ok, "skipped": skipped,
+                                 "failed": failed, "records": recs})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

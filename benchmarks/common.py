@@ -1,0 +1,30 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/experiments")
+
+
+def save_json(name: str, payload) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+
+
+def timed_us(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Mean wall-clock microseconds per call (after warmup)."""
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(rows):
+    """Print the harness CSV: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,83 @@
+"""End-to-end driver: train a transformer LM with Algorithm-1 compressed
+data-parallel gradient sync, then save + restore a checkpoint.
+
+CPU demo (a ~10M-param gemma2-family model, a few hundred steps):
+    PYTHONPATH=src python examples/train_lm.py --steps 120
+
+Production shape (what the same code runs on a v5e pod):
+    python -m repro.launch.train --arch gemma2-9b --compressor gspar \
+        --rho 0.01 --wire gather
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint
+from repro.core.api import CompressionConfig
+from repro.data.synthetic import token_batch
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_mesh
+from repro.models import transformer as tf
+from repro.models.common import split_params
+from repro.optim.optimizers import adam
+from repro.train import step as step_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--rho", type=float, default=0.05)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = tf.ModelConfig(
+        name="demo-lm", vocab=2048, d_model=args.d_model,
+        pattern=("attn_sw", "attn_full"), num_periods=args.layers // 2,
+        num_heads=8, num_kv_heads=4, head_dim=32, window=64,
+        attn_softcap=50.0, final_softcap=30.0, post_norm=True,
+        d_ff=args.d_model * 4, act="gelu", norm="rms", embed_scale=True,
+        remat="none", dtype=jnp.float32)
+
+    mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
+    params, _ = split_params(tf.init_model(jax.random.key(0), cfg))
+    print(f"model: {sum(p.size for p in jax.tree.leaves(params)) / 1e6:.1f}M params")
+
+    opt = adam(1e-3)
+    opt_state = opt.init(params)
+    comp = CompressionConfig(name="gspar", rho=args.rho, wire="dense",
+                             min_leaf_size=512)
+    with jax.set_mesh(mesh):
+        step = jax.jit(step_lib.make_compressed_train_step(
+            cfg, comp, opt, mesh, dict(shd.DP_RULES)))
+        key = jax.random.key(1)
+        first = last = None
+        for i in range(args.steps):
+            key, kd, kq = jax.random.split(key, 3)
+            batch = token_batch(kd, cfg.vocab, 8, 128)
+            params, opt_state, m = step(params, opt_state, batch, kq)
+            if first is None:
+                first = float(m["loss"])
+            last = float(m["loss"])
+            if i % 20 == 0 or i == args.steps - 1:
+                print(f"step {i:>4} loss {float(m['loss']):.4f} "
+                      f"density {float(m['density']):.4f} "
+                      f"var x{float(m['var_ratio']):.2f} "
+                      f"bits saved {float(m['dense_bits']) / max(float(m['bits']), 1):.1f}x")
+    assert last < first, "loss did not improve"
+
+    path = os.path.join(tempfile.mkdtemp(), "demo_ckpt.npz")
+    checkpoint.save(path, {"params": params})
+    restored = checkpoint.restore(path, {"params": params})
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree.leaves(restored["params"]),
+                               jax.tree.leaves(params)))
+    print(f"checkpoint roundtrip max diff: {diff} -> {path}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

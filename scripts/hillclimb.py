@@ -1,0 +1,100 @@
+"""Hillclimb executor: run one dry-run variant of a pair, compare against the
+recorded baseline, and append an iteration record to results/perf/.
+
+  PYTHONPATH=src python scripts/hillclimb.py --pair gemma2-27b:train_4k \
+      --iter 1 --change "attn_impl=chunked" \
+      --hypothesis "fused online-softmax removes the O(S^2) score chain; \
+      memory term should drop ~5x" \
+      -- --attn-impl chunked
+(args after `--` are forwarded to repro.launch.dryrun)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+PERF = "results/perf"
+DRY = "results/dryrun"
+
+
+def baseline_for(pair: str) -> dict:
+    arch, shape = pair.split(":")
+    path = os.path.join(DRY, f"{arch.replace('.', '')}_{shape}_single.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True)          # arch:shape
+    ap.add_argument("--iter", type=int, required=True)
+    ap.add_argument("--change", required=True)
+    ap.add_argument("--hypothesis", required=True)
+    ap.add_argument("--baseline-from", default=None,
+                    help="compare against this prior perf record instead of "
+                         "the sweep baseline (chained iterations)")
+    ap.add_argument("rest", nargs=argparse.REMAINDER)
+    args = ap.parse_args()
+
+    arch, shape = args.pair.split(":")
+    extra = [a for a in args.rest if a != "--"]
+    out = tempfile.mktemp(suffix=".json")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out] + extra
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=4000)
+    if proc.returncode != 0:
+        print(proc.stdout[-1500:])
+        print(proc.stderr[-3000:])
+        sys.exit(1)
+    with open(out) as f:
+        rec = json.load(f)
+
+    if args.baseline_from:
+        with open(args.baseline_from) as f:
+            base_rec = json.load(f)
+        base = base_rec["after_terms"]
+        base_dom = base_rec["dominant_after"]
+    else:
+        base_full = baseline_for(args.pair)
+        base = {k: base_full[k] for k in ("compute_s", "memory_s",
+                                          "collective_s")}
+        base_dom = base_full["dominant"]
+
+    after = {k: rec[k] for k in ("compute_s", "memory_s", "collective_s")}
+    dom_term = base_dom  # judge on the term that dominated BEFORE the change
+    before_v = base[f"{dom_term}_s" if not dom_term.endswith("_s") else dom_term]
+    after_v = after[f"{dom_term}_s"]
+    improve = (before_v - after_v) / before_v if before_v else 0.0
+    verdict = ("CONFIRMED" if improve > 0.05 else
+               "refuted (regression)" if improve < -0.05 else
+               "inconclusive (<5%)")
+
+    os.makedirs(PERF, exist_ok=True)
+    record = {
+        "pair": args.pair, "iter": args.iter, "change": args.change,
+        "hypothesis": args.hypothesis,
+        "dominant_before": dom_term, "dominant_after": rec["dominant"],
+        "before": before_v, "after": after_v,
+        "improvement": improve, "verdict": f"{verdict} ({improve * 100:+.1f}%)",
+        "before_terms": base, "after_terms": after,
+        "peak_gb": rec["memory_analysis"]["peak_gb"],
+        "dryrun_args": extra, "full_record": rec,
+    }
+    path = os.path.join(PERF, f"{arch.replace('.', '')}_{shape}_"
+                              f"iter{args.iter}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=str)
+    print(json.dumps({k: record[k] for k in
+                      ("pair", "iter", "change", "before", "after",
+                       "verdict", "dominant_after", "peak_gb")}, indent=2))
+    print(f"-> {path}")
+
+
+if __name__ == "__main__":
+    main()

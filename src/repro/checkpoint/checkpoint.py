@@ -1,0 +1,53 @@
+"""Minimal sharding-aware checkpointing (npz-based, no orbax dependency).
+
+Leaves are gathered to host, stored under path-keys in one .npz; restore
+optionally device_puts each leaf back to a target sharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save(path: str, tree: Any, extra: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez(path, **arrays)
+    if extra is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(extra, f)
+
+
+def restore(path: str, like: Any, shardings: Any | None = None) -> Any:
+    """Restore into the structure of `like`; device_put to `shardings` tree
+    (same structure) if given."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (pth, leaf), shard in zip(flat, shard_leaves):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+        arr = data[key]
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        leaves.append(jax.device_put(arr, shard) if shard is not None
+                      else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_meta(path: str) -> dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

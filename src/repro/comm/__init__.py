@@ -1,0 +1,5 @@
+"""Distributed gradient-exchange layer: sparse All-Reduce on TPU meshes."""
+from repro.comm.compaction import capacity_for, compact, scatter
+from repro.comm.sync import SyncStats, sync_tree
+
+__all__ = ["capacity_for", "compact", "scatter", "SyncStats", "sync_tree"]

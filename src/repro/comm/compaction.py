@@ -1,0 +1,48 @@
+"""Fixed-capacity compaction of sparsified gradients for TPU collectives.
+
+XLA collectives need static shapes, so the paper's variable-length sparse
+messages become fixed-capacity (values, indices) buffers:
+
+    k_cap = ceil(capacity_slack * rho * d)   (rounded up to a multiple of 128)
+
+Selection into the buffer is by magnitude, so when the realized nnz exceeds
+k_cap the *smallest* entries are dropped (overflow). We report the overflow
+mass; with slack >= 1.25 it is measured to be ~0 for d >= 2**14 (binomial
+concentration), keeping the estimator effectively unbiased.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def capacity_for(d: int, rho: float, slack: float = 1.25) -> int:
+    """Static message capacity for a leaf of size d at target density rho."""
+    k = (int(slack * rho * d) + 127) // 128 * 128
+    return min(d, max(128, k))
+
+
+def compact(q: jax.Array, k_cap: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pack the nonzeros of q into (values[k_cap], idx[k_cap], overflow_count).
+
+    idx entries for unused slots point at slot of a zero value, so scatter-add
+    of (values, idx) reconstructs q exactly (modulo overflow drops).
+    """
+    flat = q.reshape(-1)
+    mag = jnp.abs(flat.astype(jnp.float32))
+    vals_mag, idx = jax.lax.top_k(mag, k_cap)
+    vals = flat[idx]
+    vals = jnp.where(vals_mag > 0, vals, 0.0)           # mask padding slots
+    nnz = jnp.sum((mag > 0).astype(jnp.int32))
+    overflow = jnp.maximum(nnz - k_cap, 0)
+    return vals, idx.astype(jnp.int32), overflow
+
+
+def scatter(vals: jax.Array, idx: jax.Array, d: int) -> jax.Array:
+    """Dense reconstruction: zeros(d).at[idx].add(vals).
+
+    add (not set) so that stacked multi-worker buffers can be scattered in one
+    shot: scatter(vals.reshape(-1), idx.reshape(-1), d) sums contributions.
+    """
+    out = jnp.zeros((d,), vals.dtype)
+    return out.at[idx.reshape(-1)].add(vals.reshape(-1), mode="drop")

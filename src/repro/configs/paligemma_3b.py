@@ -1,0 +1,45 @@
+"""paligemma-3b [vlm]: gemma-2b language backbone (18L d_model=2048 8H kv=1
+d_ff=16384) + SigLIP vision frontend, vocab=257216. [arXiv:2407.07726]
+
+Per the assignment carve-out, the SigLIP encoder + projector is a STUB:
+input_specs provide 256 precomputed patch embeddings [B, 256, 2048] that are
+prepended to the text tokens (prefix-LM)."""
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchSpec
+from repro.models.transformer import ModelConfig
+
+NUM_PATCHES = 256
+
+FULL = ModelConfig(
+    name="paligemma-3b", vocab=257_216, d_model=2048,
+    pattern=("attn_full",), num_periods=18,
+    num_heads=8, num_kv_heads=1, head_dim=256,
+    d_ff=16384, mlp_kind="gated", act="gelu",
+    norm="rms", embed_scale=True, rope_theta=10_000.0,
+    prefix_len=NUM_PATCHES, modality="vision",
+    remat="full", dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="paligemma-3b-smoke", vocab=512, d_model=256,
+    pattern=("attn_full",), num_periods=2,
+    num_heads=4, num_kv_heads=1, head_dim=64,
+    d_ff=512, mlp_kind="gated", act="gelu",
+    norm="rms", embed_scale=True, prefix_len=8, modality="vision",
+    remat="none", dtype=jnp.float32,
+)
+
+RULES = {"heads": None, "kv_heads": None, "head_dim": "model"}
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="paligemma-3b", source="arXiv:2407.07726",
+        model=FULL, smoke=SMOKE,
+        shapes=("train_4k", "prefill_32k", "decode_32k"),
+        skip_notes={"long_500k": "gemma-1 backbone: full global attention only."},
+        rules_overrides=RULES,
+        notes="vision frontend stubbed: 256 patch embeddings prepended "
+              "(prefix-LM); decode runs on the text tail against the cache.",
+    )

@@ -1,0 +1,50 @@
+"""zamba2-2.7b [hybrid]: 54 Mamba2 layers d_model=2560 (d_state=64) + shared
+attention blocks (32H kv=32, d_ff=10240) applied every 6 mamba layers with
+per-site LoRA adapters. [arXiv:2411.15242]
+
+Structure here: 9 periods of [shared_attn, mamba x6] (the shared block's
+weights are stored once; each site adds a rank-64 LoRA on its input
+projection — faithful to zamba2's weight-shared design)."""
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchSpec
+from repro.models.ssm import Mamba2Config
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="zamba2-2.7b", vocab=32_000, d_model=2560,
+    pattern=("shared_attn", "mamba", "mamba", "mamba", "mamba", "mamba",
+             "mamba"),
+    num_periods=9,                                   # 54 mamba + 9 shared sites
+    num_heads=32, num_kv_heads=32, head_dim=80,
+    d_ff=10240, mlp_kind="gated", act="gelu",
+    mamba=Mamba2Config(d_model=2560, d_state=64, head_dim=64, expand=2,
+                       conv_width=4, chunk=64),
+    shared_lora_rank=64,
+    norm="rms", remat="full", dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke", vocab=512, d_model=128,
+    pattern=("shared_attn", "mamba", "mamba"),
+    num_periods=1,
+    num_heads=4, num_kv_heads=4, head_dim=32,
+    d_ff=256, mlp_kind="gated", act="gelu",
+    mamba=Mamba2Config(d_model=128, d_state=16, head_dim=16, chunk=8),
+    shared_lora_rank=8,
+    norm="rms", remat="none", dtype=jnp.float32,
+)
+
+RULES = {"head_dim": None}
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="zamba2-2.7b", source="arXiv:2411.15242",
+        model=FULL, smoke=SMOKE,
+        shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+        skip_notes={},
+        rules_overrides=RULES,
+        notes="long_500k runs: mamba state is O(1); only the 9 shared-attn "
+              "sites keep a (shared-shape) full cache.",
+    )

@@ -1,0 +1,120 @@
+"""Public pytree-level API for gradient compression.
+
+The paper applies sparsification independently per layer (section 5.2); here a
+"layer" is a pytree leaf. ``compress_tree`` splits the PRNG key per leaf,
+compresses each, and aggregates accounting. ``ErrorFeedback`` (beyond-paper,
+Seide et al. 2014 / Karimireddy et al. 2019) is provided for the biased top-k
+baseline and as an optional add-on for any scheme.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import CompressedGrad, make_compressor
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Static configuration for the gradient-compression stage."""
+    name: str = "gspar"              # registry key: gspar|unisp|topk|qsgd|terngrad|none
+    rho: float = 0.1                 # target density (gspar-greedy, unisp, topk)
+    eps: float = 1.0                 # variance budget (gspar-closed)
+    algo: str = "greedy"             # gspar solver: greedy | closed
+    num_iters: int = 2               # greedy rescale iterations (paper uses 2)
+    qsgd_bits: int = 4
+    float_bits: int = 32             # b in the coding model
+    error_feedback: bool = False     # accumulate compression residual locally
+    min_leaf_size: int = 256         # leaves smaller than this are sent dense
+    # wire/sync settings (consumed by repro.comm)
+    wire: str = "dense"              # dense | gather | packed
+    capacity_slack: float = 1.25     # k_cap = ceil(slack * rho * d) for gather wire
+    resparsify_pods: bool = False    # Alg.1 step 7 -> hierarchical pod-level resync
+
+    def kwargs(self) -> dict[str, Any]:
+        if self.name == "gspar":
+            return dict(eps=self.eps, algo=self.algo, rho=self.rho,
+                        num_iters=self.num_iters, b=self.float_bits)
+        if self.name in ("unisp", "topk"):
+            return dict(rho=self.rho, b=self.float_bits)
+        if self.name == "qsgd":
+            return dict(bits=self.qsgd_bits)
+        return dict(b=self.float_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeStats:
+    """Aggregated per-step compression accounting across all leaves."""
+    bits: jax.Array          # total message bits this worker sends
+    dense_bits: jax.Array    # what an uncompressed message would cost
+    density: jax.Array       # realized nnz fraction over all coords
+    var_ratio: jax.Array     # size-weighted mean ||Q(g)||^2/||g||^2
+
+
+jax.tree_util.register_dataclass(TreeStats)
+
+
+def compress_leaf(cfg: CompressionConfig, key: jax.Array, g: jax.Array) -> CompressedGrad:
+    fn = make_compressor(cfg.name, **cfg.kwargs())
+    return fn(key, g)
+
+
+def compress_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
+                  residual: Any | None = None,
+                  stacked: Any | None = None) -> tuple[Any, Any, TreeStats]:
+    """Compress every leaf of ``grads``; returns (q_tree, new_residual, stats).
+
+    If ``cfg.error_feedback`` the residual tree (same structure) is added to
+    the gradient before compression and the compression error is carried over.
+
+    ``stacked`` (optional, same structure, bool leaves) marks leaves whose
+    leading axis is a scan-over-layers stack: those are compressed per layer
+    (vmap over axis 0) — the paper applies sparsification independently per
+    layer, and it keeps flattened sizes within int32 indexing range.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    res_leaves = (jax.tree_util.tree_flatten(residual)[0]
+                  if residual is not None else [None] * len(leaves))
+    stk_leaves = (jax.tree_util.tree_flatten(stacked)[0]
+                  if stacked is not None else [False] * len(leaves))
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    q_leaves, new_res, bits, dense_bits, nnz, total, wvar = [], [], [], [], [], [], []
+    for leaf, res, k, stk in zip(leaves, res_leaves, keys, stk_leaves):
+        target = leaf + res if (cfg.error_feedback and res is not None) else leaf
+        if leaf.size < cfg.min_leaf_size:     # tiny leaves: dense passthrough
+            cg = make_compressor("none", b=cfg.float_bits)(k, target)
+            cg_bits, cg_var = cg.bits, cg.var_ratio
+        elif stk and leaf.ndim >= 2 and leaf.shape[0] > 1:
+            lk = jax.random.split(k, leaf.shape[0])
+            cg = jax.vmap(lambda kk, gg: compress_leaf(cfg, kk, gg))(lk, target)
+            cg_bits = jnp.sum(cg.bits)
+            cg_var = jnp.mean(cg.var_ratio)
+        else:
+            cg = compress_leaf(cfg, k, target)
+            cg_bits, cg_var = cg.bits, cg.var_ratio
+        q_leaves.append(cg.q)
+        new_res.append((target - cg.q).astype(leaf.dtype)
+                       if cfg.error_feedback else jnp.zeros_like(leaf))
+        bits.append(cg_bits)
+        dense_bits.append(jnp.asarray(float(leaf.size * cfg.float_bits)))
+        nnz.append(jnp.sum((jnp.abs(cg.q.reshape(-1)) > 0).astype(jnp.float32)))
+        total.append(float(leaf.size))
+        wvar.append(cg_var * float(leaf.size))   # leaf.size may exceed int32
+
+    tot = sum(total)
+    stats = TreeStats(
+        bits=sum(bits), dense_bits=sum(dense_bits),
+        density=sum(nnz) / tot,
+        var_ratio=sum(wvar) / tot,
+    )
+    q_tree = jax.tree_util.tree_unflatten(treedef, q_leaves)
+    res_tree = jax.tree_util.tree_unflatten(treedef, new_res)
+    return q_tree, res_tree, stats
+
+
+def zeros_like_residual(params: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, params)

@@ -1,0 +1,66 @@
+"""Coding-length model for sparsified gradients (paper section 3.3 + Theorem 4).
+
+The hybrid message format:
+  Q_A: coordinates with p_i = 1        -> (log2 d index bits) + (b value bits) each
+  Q_B: coordinates with p_i < 1        -> Q(g)_i = sign(g_i)/lambda, so each costs
+       (log2 d index bits) + 1 sign bit, ... OR a dense ternary map of <= 2d bits,
+       whichever is shorter; plus b bits once for 1/lambda.
+
+Theorem 4 bound for a (rho, s)-approximately sparse gradient:
+  E H[Q(g)] <= s*(b + log2 d) + min(rho*s*log2 d, 2d) + b
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expected_coding_bits(p: jax.Array, b: int = 32) -> jax.Array:
+    """Expected message bits for one gradient under the hybrid coding (section 3.3).
+
+    Matches the experimental cost model of section 5.1:
+      sum_{p_i=1} (b + log2 d) + min(2d, log2 d * sum_{p_i<1} p_i) + b
+    """
+    p = p.reshape(-1)
+    d = p.shape[0]
+    logd = jnp.log2(jnp.asarray(float(d)))
+    sure = p >= 1.0
+    n_sure = jnp.sum(sure.astype(jnp.float32))
+    tail_mass = jnp.sum(jnp.where(sure, 0.0, p))
+    qa_bits = n_sure * (b + logd)
+    qb_bits = jnp.minimum(2.0 * d, logd * tail_mass)
+    return qa_bits + qb_bits + b
+
+
+def dense_coding_bits(d: int, b: int = 32) -> float:
+    """Uncompressed message: d floats."""
+    return float(d) * b
+
+
+def realized_coding_bits(q: jax.Array, p: jax.Array, b: int = 32) -> jax.Array:
+    """Bits for one *sampled* message Q(g) (not the expectation): counts the
+    actually-selected coordinates per branch."""
+    q = q.reshape(-1)
+    p = p.reshape(-1)
+    d = q.shape[0]
+    logd = jnp.log2(jnp.asarray(float(d)))
+    nz = jnp.abs(q) > 0
+    sure = p >= 1.0
+    n_a = jnp.sum((nz & sure).astype(jnp.float32))
+    n_b = jnp.sum((nz & ~sure).astype(jnp.float32))
+    qa_bits = n_a * (b + logd)
+    qb_bits = jnp.minimum(2.0 * d, n_b * logd)   # index list vs dense ternary map
+    return qa_bits + qb_bits + b
+
+
+def theorem4_bound_bits(s: int, rho: float, d: int, b: int = 32) -> float:
+    """The Theorem 4 upper bound: s(b + log2 d) + min(rho*s*log2 d, 2d) + b."""
+    import math
+    logd = math.log2(d)
+    return s * (b + logd) + min(rho * s * logd, 2.0 * d) + b
+
+
+def qsgd_coding_bits(d: int, bits: int) -> float:
+    """QSGD cost model used in the paper's Figures 5-6: T*M*b per element -> d*bits
+    per message (plus one norm float, which the paper's model folds in)."""
+    return float(d) * bits

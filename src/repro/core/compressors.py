@@ -1,0 +1,146 @@
+"""Gradient compressor zoo.
+
+The paper's method ("gspar", Algorithms 2/3) plus every baseline it compares
+against or cites: uniform sampling (UniSp), QSGD [Alistarh et al.], TernGrad
+[Wen et al.], deterministic top-k (biased; used with error feedback), and the
+identity. Each compressor maps (key, g) -> CompressedGrad with the sparsified
+(still-dense-layout) gradient, the probability vector used, and message-size
+accounting. All are shape-static and jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding, sparsify
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressedGrad:
+    """A compressed gradient in dense layout plus accounting metadata."""
+    q: jax.Array            # unbiased (or biased, for topk) estimate of g
+    p: jax.Array            # probability vector used (ones for dense schemes)
+    bits: jax.Array         # realized message bits under the scheme's wire format
+    var_ratio: jax.Array    # ||q||^2 / ||g||^2 (the paper's reported `var`)
+
+
+def _finish(g, q, p, bits) -> CompressedGrad:
+    g32 = g.astype(jnp.float32).reshape(-1)
+    q32 = q.astype(jnp.float32).reshape(-1)
+    den = jnp.sum(g32 * g32)
+    var_ratio = jnp.where(den > 0, jnp.sum(q32 * q32) / jnp.where(den > 0, den, 1.0), 0.0)
+    return CompressedGrad(q=q, p=p, bits=jnp.asarray(bits, jnp.float32),
+                          var_ratio=var_ratio)
+
+
+# ---------------------------------------------------------------------------
+# The paper's method
+# ---------------------------------------------------------------------------
+
+def gspar(key, g, *, eps: float = 1.0, algo: str = "greedy", rho: float = 0.1,
+          num_iters: int = 2, b: int = 32) -> CompressedGrad:
+    """Wangni et al. unbiased sparsification with optimal probabilities.
+
+    algo="closed": Algorithm 2 with variance budget (1+eps).
+    algo="greedy": Algorithm 3 with target density rho (paper default, 2 iters).
+    """
+    if algo == "closed":
+        p = sparsify.closed_form_probabilities(g, eps)
+    elif algo == "greedy":
+        p = sparsify.greedy_probabilities(g, rho, num_iters)
+    else:
+        raise ValueError(f"unknown gspar algo: {algo!r}")
+    q = sparsify.sparsify(key, g, p)
+    bits = coding.realized_coding_bits(q, p, b)
+    return _finish(g, q, p, bits)
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def unisp(key, g, *, rho: float = 0.1, b: int = 32) -> CompressedGrad:
+    """Uniform sampling baseline: p_i = rho everywhere (unbiased)."""
+    p = sparsify.uniform_probabilities(g, rho)
+    q = sparsify.sparsify(key, g, p)
+    d = q.size
+    nnz = jnp.sum((jnp.abs(q.reshape(-1)) > 0).astype(jnp.float32))
+    bits = nnz * (b + jnp.log2(jnp.asarray(float(d)))) + b
+    return _finish(g, q, p, bits)
+
+
+def topk(key, g, *, rho: float = 0.1, b: int = 32) -> CompressedGrad:
+    """Deterministic top-k by magnitude. BIASED -- pair with error feedback."""
+    del key
+    flat = g.reshape(-1)
+    d = flat.shape[0]
+    k = max(1, int(round(rho * d)))
+    thresh = jax.lax.top_k(jnp.abs(flat).astype(jnp.float32), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    q = jnp.where(mask, flat, 0).reshape(g.shape)
+    p = mask.astype(jnp.float32).reshape(g.shape)
+    bits = float(k) * (b + jnp.log2(jnp.asarray(float(d)))) + b
+    return _finish(g, q, p, bits)
+
+
+def qsgd(key, g, *, bits: int = 4) -> CompressedGrad:
+    """QSGD [Alistarh et al. 2017]: unbiased stochastic quantization to
+    s = 2^bits - 1 levels of |g_i| / ||g||_2."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    d = flat.shape[0]
+    s = float(2 ** bits - 1)
+    norm = jnp.linalg.norm(flat)
+    scaled = jnp.where(norm > 0, jnp.abs(flat) / jnp.where(norm > 0, norm, 1.0), 0.0) * s
+    lo = jnp.floor(scaled)
+    prob_up = scaled - lo
+    u = jax.random.uniform(key, flat.shape)
+    level = lo + (u < prob_up)
+    q = (jnp.sign(flat) * level * norm / s).reshape(g.shape).astype(g.dtype)
+    p = jnp.ones_like(g, jnp.float32)
+    msg_bits = coding.qsgd_coding_bits(d, bits) + 32  # + the norm float
+    return _finish(g, q, p, msg_bits)
+
+
+def terngrad(key, g, *, b: int = 32) -> CompressedGrad:
+    """TernGrad [Wen et al. 2017]: Q_i = max|g| * sign(g_i) * Bern(|g_i|/max|g|)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    st = jnp.max(jnp.abs(flat))
+    prob = jnp.where(st > 0, jnp.abs(flat) / jnp.where(st > 0, st, 1.0), 0.0)
+    u = jax.random.uniform(key, flat.shape)
+    q = (st * jnp.sign(flat) * (u < prob)).reshape(g.shape).astype(g.dtype)
+    p = prob.reshape(g.shape)
+    msg_bits = 2.0 * flat.shape[0] + b                # ternary map + scale float
+    return _finish(g, q, p, msg_bits)
+
+
+def identity(key, g, *, b: int = 32) -> CompressedGrad:
+    """No compression ("baseline" in the paper's figures)."""
+    del key
+    p = jnp.ones_like(g, jnp.float32)
+    return _finish(g, g, p, coding.dense_coding_bits(g.size, b))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+REGISTRY: dict[str, Callable] = {
+    "gspar": gspar,
+    "unisp": unisp,
+    "topk": topk,
+    "qsgd": qsgd,
+    "terngrad": terngrad,
+    "none": identity,
+}
+
+
+def make_compressor(name: str, **kwargs) -> Callable:
+    """Return a (key, g) -> CompressedGrad callable with options bound."""
+    if name not in REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(REGISTRY)}")
+    return partial(REGISTRY[name], **kwargs)

@@ -1,0 +1,122 @@
+"""Unbiased gradient sparsification (Wangni et al., NIPS 2018).
+
+Q(g)_i = Z_i * g_i / p_i,  Z_i ~ Bernoulli(p_i)   (unbiased for any p in (0,1])
+
+Two probability solvers from the paper:
+  * ``closed_form_probabilities``  -- Algorithm 2 (optimal, needs a sort)
+  * ``greedy_probabilities``       -- Algorithm 3 (sort-free, iterative rescale)
+and the baseline ``uniform_probabilities`` (the paper's "UniSp").
+
+All functions are pure jnp, jit/vmap-friendly, and define 0/0 := 0 so that
+exactly-zero gradient coordinates get p_i = 0 and Q(g)_i = 0 (still unbiased).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-30
+
+
+def _safe_div(num, den):
+    return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+
+
+def closed_form_probabilities(g: jax.Array, eps: float | jax.Array) -> jax.Array:
+    """Algorithm 2: optimal p for variance budget (1+eps)*sum(g^2).
+
+    Finds the smallest k with
+        |g_(k+1)| * sum_{i>k} |g_(i)|  <=  eps * sum g^2 + sum_{i>k} g_(i)^2
+    then p_i = min(lambda * |g_i|, 1) with
+        lambda = sum_{i>k}|g_(i)| / (eps * sum g^2 + sum_{i>k} g_(i)^2).
+    """
+    g = jnp.asarray(g)
+    shape = g.shape
+    a = jnp.abs(g.reshape(-1)).astype(jnp.float32)
+    d = a.shape[0]
+    a_sorted = jnp.sort(a)[::-1]                     # descending magnitudes
+    g2_total = jnp.sum(a_sorted * a_sorted)
+
+    # tail sums over indices >= k (0-indexed), via reversed cumsum: computing
+    # them as total - prefix cancels catastrophically for the tiny tails that
+    # decide k, so accumulate from the small end instead.
+    tail_l1 = jnp.cumsum(a_sorted[::-1])[::-1]
+    tail_l2 = jnp.cumsum((a_sorted * a_sorted)[::-1])[::-1]
+
+    budget = eps * g2_total + tail_l2
+    cond = a_sorted * tail_l1 <= budget              # cond[k], k = 0..d-1
+    any_ok = jnp.any(cond)
+    k = jnp.where(any_ok, jnp.argmax(cond), d)       # smallest satisfying k
+    k_safe = jnp.minimum(k, d - 1)
+    lam = jnp.where(any_ok, _safe_div(tail_l1[k_safe], budget[k_safe]), 0.0)
+
+    p = jnp.minimum(lam * a, 1.0)
+    # k == d (or zero tail): keep everything that is nonzero surely
+    p = jnp.where(any_ok, p, jnp.ones_like(p))
+    p = jnp.where(a > 0, p, 0.0)
+    return p.reshape(shape)
+
+
+def greedy_probabilities(g: jax.Array, rho: float | jax.Array,
+                         num_iters: int = 2) -> jax.Array:
+    """Algorithm 3: sort-free greedy solver targeting density sum(p)/d ~= rho.
+
+    p0_i = min(rho*d*|g_i| / ||g||_1, 1); then ``num_iters`` rescales of the
+    non-saturated ("active") set. The paper uses 2 iterations everywhere.
+    """
+    g = jnp.asarray(g)
+    shape = g.shape
+    a = jnp.abs(g.reshape(-1)).astype(jnp.float32)
+    d = a.shape[0]
+    rho_d = jnp.asarray(rho, jnp.float32) * jnp.float32(d)   # d may exceed int32
+    p0 = jnp.minimum(_safe_div(rho_d * a, jnp.sum(a)), 1.0)
+
+    def body(_, p):
+        active = p < 1.0
+        n_active = jnp.sum(active, dtype=jnp.float32)
+        target = rho_d - (jnp.float32(d) - n_active)  # rho*d - d + |I|
+        c = _safe_div(target, jnp.sum(jnp.where(active, p, 0.0)))
+        c = jnp.maximum(c, 1.0)                      # c <= 1 -> break (no-op)
+        return jnp.minimum(c * p, 1.0)
+
+    p = jax.lax.fori_loop(0, num_iters, body, p0)
+    p = jnp.where(a > 0, p, 0.0)
+    return p.reshape(shape)
+
+
+def uniform_probabilities(g: jax.Array, rho: float | jax.Array) -> jax.Array:
+    """Baseline "UniSp": p_i = rho for every coordinate (unbiased, suboptimal)."""
+    g = jnp.asarray(g)
+    p = jnp.full(g.shape, jnp.asarray(rho, jnp.float32))
+    return jnp.where(jnp.abs(g) > 0, p, 0.0)
+
+
+def sample_mask(key: jax.Array, p: jax.Array) -> jax.Array:
+    """Z_i ~ Bernoulli(p_i) as a {0,1} array of p's shape."""
+    u = jax.random.uniform(key, p.shape, dtype=jnp.float32)
+    return (u < p).astype(p.dtype)
+
+
+def apply_mask(g: jax.Array, p: jax.Array, z: jax.Array) -> jax.Array:
+    """Q(g) = Z * g / p with 0/0 := 0."""
+    scaled = _safe_div(g.astype(jnp.float32), p)
+    return (z * scaled).astype(g.dtype)
+
+
+def sparsify(key: jax.Array, g: jax.Array, p: jax.Array) -> jax.Array:
+    """One-shot unbiased sparsification Q(g) given the probability vector p."""
+    return apply_mask(g, p, sample_mask(key, p))
+
+
+def expected_density(p: jax.Array) -> jax.Array:
+    """E ||Q(g)||_0 / d = mean(p)."""
+    return jnp.mean(p)
+
+
+def variance_inflation(g: jax.Array, p: jax.Array) -> jax.Array:
+    """E||Q(g)||^2 / ||g||^2 = (sum g_i^2/p_i) / (sum g_i^2).  >= 1 always."""
+    g = g.reshape(-1).astype(jnp.float32)
+    p = p.reshape(-1)
+    num = jnp.sum(jnp.where(p > 0, _safe_div(g * g, p), 0.0))
+    den = jnp.sum(g * g)
+    return _safe_div(num, den)

@@ -1,0 +1,83 @@
+"""Synthetic data: token streams for LM training plus the paper's section-5
+generators (logistic regression / SVM data with controllable gradient
+sparsity via C1, C2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM token pipeline (deterministic, sharded-friendly)
+# ---------------------------------------------------------------------------
+
+def token_batch(key: jax.Array, vocab: int, batch: int, seq: int,
+                structure: int = 97) -> dict:
+    """One batch of pseudo-text: Markov-ish tokens so the loss is learnable
+    (next token correlates with current), not pure noise."""
+    k1, k2 = jax.random.split(key)
+    base = jax.random.randint(k1, (batch, seq), 0, vocab)
+    shifted = (base * 31 + structure) % vocab
+    noise = jax.random.bernoulli(k2, 0.25, (batch, seq))
+    tokens = jnp.where(noise, base, jnp.roll(shifted, 1, axis=1))
+    return {"tokens": tokens}
+
+
+def token_stream(key: jax.Array, vocab: int, batch: int, seq: int):
+    while True:
+        key, sub = jax.random.split(key)
+        yield token_batch(sub, vocab, batch, seq)
+
+
+# ---------------------------------------------------------------------------
+# Paper section 5.1: synthetic convex data
+#   dense:  x_ni ~ N(0,1)
+#   magnitude: B ~ U[0,1]^d;  B_i <- C1*B_i if B_i <= C2
+#   data:   x_n <- x_n . B
+#   labels: w ~ N(0,I), y = sign(x^T w)
+# ---------------------------------------------------------------------------
+
+def logreg_data(seed: int, n: int = 1024, d: int = 2048,
+                c1: float = 0.6, c2: float = 0.25):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    b = rng.uniform(0, 1, d).astype(np.float32)
+    b = np.where(b <= c2, c1 * b, b)
+    x = x * b
+    w = rng.standard_normal(d).astype(np.float32)
+    y = np.sign(x @ w).astype(np.float32)
+    y[y == 0] = 1.0
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# Paper section 5.3: synthetic SVM data
+#   w ~ U[-0.5, 0.5]^d; y = sign(x^T w + sigma), sigma ~ N(0,1)
+# ---------------------------------------------------------------------------
+
+def svm_data(seed: int, n: int = 51200, d: int = 256,
+             c1: float = 0.01, c2: float = 0.9):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    b = rng.uniform(0, 1, d).astype(np.float32)
+    b = np.where(b <= c2, c1 * b, b)
+    x = x * b
+    w = rng.uniform(-0.5, 0.5, d).astype(np.float32)
+    noise = rng.standard_normal(n).astype(np.float32)
+    y = np.sign(x @ w + noise).astype(np.float32)
+    y[y == 0] = 1.0
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# Paper section 5.2: synthetic CIFAR-shaped images (offline stand-in)
+# ---------------------------------------------------------------------------
+
+def image_data(seed: int, n: int = 2048, classes: int = 10, hw: int = 32):
+    """Class-conditional Gaussian blobs over 32x32x3 so a CNN can learn."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, classes, n)
+    protos = rng.standard_normal((classes, hw, hw, 3)).astype(np.float32)
+    x = protos[y] + 0.8 * rng.standard_normal((n, hw, hw, 3)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)

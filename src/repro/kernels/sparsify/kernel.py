@@ -1,0 +1,137 @@
+"""Pallas TPU kernels for the paper's hot loop.
+
+Two kernels:
+
+  sparsify  -- fused threshold + Bernoulli sample + amplify (Q(g) given the
+               greedy lambda). One read of g from HBM, one write of Q; the
+               VPU analogue of the paper's SIMD note (section 3.2). Uniforms
+               come either from an input buffer (the paper's pregenerated-
+               randoms trick, bit-exact testable) or from the on-core PRNG
+               (pltpu.prng_random_bits; production path, no HBM traffic for
+               randomness).
+  stats     -- single-pass block reduction producing (sum|g|, sum g^2,
+               max|g|) so Algorithm 3's scalar rescale loop reads g from HBM
+               once instead of twice.
+
+Block layout: inputs are reshaped to [R, C] with C a multiple of 128 and
+R a multiple of 8; tiles of (BLOCK_R, BLOCK_C) f32 live in VMEM
+(3 x 128 x 512 x 4 B = 768 KB working set, well under the ~16 MB/core VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_R = 128
+BLOCK_C = 512
+
+
+def _sparsify_body(g_ref, u_ref, lam_ref, out_ref):
+    g = g_ref[...].astype(jnp.float32)
+    lam = lam_ref[0, 0]
+    p = jnp.minimum(lam * jnp.abs(g), 1.0)
+    z = u_ref[...] < p
+    safe_p = jnp.where(p > 0, p, 1.0)
+    out_ref[...] = jnp.where(z, g / safe_p, 0.0).astype(out_ref.dtype)
+
+
+def _sparsify_prng_body(g_ref, lam_ref, seed_ref, out_ref):
+    # independent stream per tile: fold the tile coordinates into the seed
+    i, j = pl.program_id(0), pl.program_id(1)
+    pltpu.prng_seed(seed_ref[0, 0] + i * pl.num_programs(1) + j)
+    bits = pltpu.prng_random_bits(g_ref.shape)
+    u = (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))   # [0, 1)
+    g = g_ref[...].astype(jnp.float32)
+    lam = lam_ref[0, 0]
+    p = jnp.minimum(lam * jnp.abs(g), 1.0)
+    z = u < p
+    safe_p = jnp.where(p > 0, p, 1.0)
+    out_ref[...] = jnp.where(z, g / safe_p, 0.0).astype(out_ref.dtype)
+
+
+def sparsify_2d(g: jax.Array, u: jax.Array, lam: jax.Array,
+                interpret: bool = False) -> jax.Array:
+    """g, u: [R, C] with R % BLOCK_R == 0, C % BLOCK_C == 0. lam: scalar."""
+    r, c = g.shape
+    grid = (r // BLOCK_R, c // BLOCK_C)
+    lam2 = jnp.asarray(lam, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _sparsify_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), g.dtype),
+        interpret=interpret,
+        name="gspar_sparsify",
+    )(g, u, lam2)
+
+
+def sparsify_prng_2d(g: jax.Array, lam: jax.Array, seed: jax.Array,
+                     interpret: bool = False) -> jax.Array:
+    """Production variant: uniforms from the on-core PRNG (no u input)."""
+    r, c = g.shape
+    grid = (r // BLOCK_R, c // BLOCK_C)
+    lam2 = jnp.asarray(lam, jnp.float32).reshape(1, 1)
+    seed2 = jnp.asarray(seed, jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        _sparsify_prng_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), g.dtype),
+        interpret=interpret,
+        name="gspar_sparsify_prng",
+    )(g, lam2, seed2)
+
+
+def _stats_body(g_ref, l1_ref, l2_ref, mx_ref):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        l1_ref[0, 0] = 0.0
+        l2_ref[0, 0] = 0.0
+        mx_ref[0, 0] = 0.0
+
+    a = jnp.abs(g_ref[...].astype(jnp.float32))
+    l1_ref[0, 0] += jnp.sum(a)
+    l2_ref[0, 0] += jnp.sum(a * a)
+    mx_ref[0, 0] = jnp.maximum(mx_ref[0, 0], jnp.max(a))
+
+
+def stats_2d(g: jax.Array, interpret: bool = False):
+    """Single pass over g: (sum|g|, sum g^2, max|g|) as (1,1) f32 outputs."""
+    r, c = g.shape
+    grid = (r // BLOCK_R, c // BLOCK_C)
+    out = pl.pallas_call(
+        _stats_body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32)] * 3,
+        interpret=interpret,
+        name="gspar_stats",
+    )(g)
+    return out[0][0, 0], out[1][0, 0], out[2][0, 0]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the sparsify kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparsify_ref(g: jax.Array, u: jax.Array, lam: jax.Array) -> jax.Array:
+    """Fused threshold-sample-scale (the inner loop of Algorithms 1+3):
+
+        p_i = min(lam * |g_i|, 1)
+        Z_i = [u_i < p_i]
+        Q_i = Z_i * g_i / p_i
+
+    with 0/0 := 0. g, u same shape; lam scalar. The uniform draws arrive as an
+    input (the paper's section-5.3 pregenerated-randoms trick), so the oracle
+    is bit-exact against the kernel."""
+    g32 = g.astype(jnp.float32)
+    p = jnp.minimum(lam * jnp.abs(g32), 1.0)
+    z = u < p
+    safe_p = jnp.where(p > 0, p, 1.0)
+    return jnp.where(z, g32 / safe_p, 0.0).astype(g.dtype)
+
+
+def stats_ref(g: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-pass gradient statistics feeding Algorithm 3's scalar loop:
+    (sum |g|, sum g^2, max |g|) in fp32."""
+    a = jnp.abs(g.astype(jnp.float32))
+    return jnp.sum(a), jnp.sum(a * a), jnp.max(a)

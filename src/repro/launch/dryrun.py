@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           # XLA-CPU's all-reduce-promotion pass segfaults on
+                           # bf16 all-reduces (host backend only; TPU is the
+                           # target). Disabling it is a host-dry-run-only
+                           # workaround and does not change the lowered HLO we
+                           # analyze.
+                           "--xla_disable_hlo_passes=all-reduce-promotion")
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape x mesh) combination against the production mesh
+using ShapeDtypeStruct stand-ins — no device allocation. Prints
+memory_analysis() (fits?) and cost_analysis() (FLOPs/bytes), and emits the
+three-term roofline record consumed by EXPERIMENTS.md section Roofline.
+
+The XLA_FLAGS line above MUST precede any jax import: jax locks the host
+device count at first init. Do not set this flag globally — smoke tests and
+benches run single-device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch rwkv6-1.6b \
+      --shape train_4k [--multi-pod] [--wire gather] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --list   # all valid pairs
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.core.api import CompressionConfig
+from repro.dist import sharding as shd
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf
+from repro.models.common import split_params
+from repro.optim.optimizers import adam
+from repro.roofline import analysis
+from repro.train import step as step_lib
+
+
+def build_rules(spec: registry.ArchSpec, multi_pod: bool, for_state: bool,
+                shape_name: str | None = None) -> dict:
+    base = dict(shd.FSDP_RULES if (for_state or spec.train_mode == "fsdp")
+                else shd.DP_RULES)
+    base.update(spec.rules_overrides)
+    if shape_name == "long_500k":
+        base["seq"] = ("data",)        # shard huge decode caches along seq
+    if multi_pod:
+        base = shd.with_pod(base)
+    return base
+
+
+def count_params(cfg: tf.ModelConfig, params_sds) -> tuple[float, float]:
+    """(total, active) parameter counts; active discounts unrouted experts."""
+    total = active = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(params_sds)[0]
+    for path, leaf in flat:
+        n = 1.0
+        for s in leaf.shape:
+            n *= s
+        total += n
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        if cfg.moe is not None and ("w_gate" in keys or "w_up" in keys
+                                    or "w_down" in keys):
+            active += n * cfg.moe.top_k / cfg.moe.num_experts
+        else:
+            active += n
+    return total, active
+
+
+def _probe_variant(cfg: "tf.ModelConfig", periods: int) -> "tf.ModelConfig":
+    """Unrolled shallow variant for per-period cost probing: XLA's
+    cost_analysis counts while-loop bodies ONCE (not x trip count), so
+    scan-over-layers modules underreport FLOPs/bytes/collectives. We lower
+    fully-unrolled 1- and 2-period variants and extrapolate linearly."""
+    kw = dict(num_periods=periods, unroll=True)
+    if cfg.encoder_periods:
+        kw["encoder_periods"] = periods
+    if cfg.rwkv is not None:
+        kw["rwkv"] = dataclasses.replace(cfg.rwkv, unroll=True)
+    # NOTE: the mamba chunk scan stays rolled -- unrolling 64-512 chunk
+    # bodies under remat made XLA-CPU compiles exceed 50 min. The bodies are
+    # < 5% of a mamba layer's FLOPs (projections dominate: ~133 MF/token vs
+    # ~5 MF/token of intra-chunk math), so the undercount is bounded;
+    # documented in EXPERIMENTS.md.
+    return dataclasses.replace(cfg, **kw)
+
+
+def _build_lowered(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
+                   compressor, rho, shard_local_sync=True):
+    """Lower one step for the given (possibly probe-modified) config."""
+    seq, global_batch, kind = registry.SHAPES[shape_name]
+    param_rules = build_rules(spec, multi_pod, for_state=(mode == "fsdp"))
+    state_rules = build_rules(spec, multi_pod, for_state=True)
+    act_rules = dict(param_rules)
+    params_sds, axes = specs_lib.param_structs(cfg, param_rules, mesh)
+
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            moment_dtype = (jnp.bfloat16 if "deepseek" in cfg.name
+                            else jnp.float32)
+            opt = adam(1e-4, moment_dtype=moment_dtype)
+            opt_sds = specs_lib.opt_state_structs(opt, params_sds, axes,
+                                                  state_rules, mesh)
+            batch_sds = specs_lib.train_batch_structs(cfg, shape_name, mesh,
+                                                      multi_pod)
+            key_sds = jax.eval_shape(lambda: jax.random.key(0))
+            comp = CompressionConfig(name=compressor, rho=rho, wire=wire,
+                                     min_leaf_size=4096)
+            if mode == "compressed":
+                step = step_lib.make_compressed_train_step(
+                    cfg, comp, opt, mesh, act_rules, multi_pod=multi_pod,
+                    shard_local_sync=shard_local_sync)
+            else:
+                step7 = dataclasses.replace(comp, wire="dense")
+                step = step_lib.make_fsdp_train_step(cfg, step7, opt, mesh,
+                                                     act_rules)
+            lowered = jax.jit(step).lower(params_sds, opt_sds, batch_sds,
+                                          key_sds)
+        elif kind == "prefill":
+            cache_sds, _ = specs_lib.cache_structs(cfg, shape_name,
+                                                   state_rules, mesh)
+            batch_sds = specs_lib.train_batch_structs(cfg, shape_name, mesh,
+                                                      multi_pod)
+            step = step_lib.make_prefill_step(cfg, mesh, act_rules)
+            lowered = jax.jit(step).lower(params_sds, batch_sds, cache_sds)
+        else:  # decode
+            cache_rules = build_rules(spec, multi_pod, for_state=True,
+                                      shape_name=shape_name)
+            cache_sds, _ = specs_lib.cache_structs(cfg, shape_name,
+                                                   cache_rules, mesh)
+            tok_spec = shd.resolve_spec(
+                (global_batch, 1), ("batch", None),
+                {"batch": ("pod", "data") if multi_pod else ("data",)}, mesh)
+            tok_sds = jax.ShapeDtypeStruct(
+                (global_batch, 1), jnp.int32,
+                sharding=NamedSharding(mesh, tok_spec))
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32,
+                                           sharding=NamedSharding(mesh, P()))
+            step = step_lib.make_decode_step(cfg, mesh, act_rules)
+            lowered = jax.jit(step).lower(params_sds, cache_sds, tok_sds,
+                                          pos_sds)
+    return lowered, params_sds
+
+
+def _probe_costs(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
+                 compressor, rho, shard_local_sync=True):
+    """(flops, bytes, collective_bytes) per extra period + 1-period base."""
+    out = []
+    for periods in (1, 2):
+        pcfg = _probe_variant(cfg, periods)
+        lowered, _ = _build_lowered(pcfg, spec, shape_name, mesh, multi_pod,
+                                    mode, wire, compressor, rho,
+                                    shard_local_sync)
+        with jax.set_mesh(mesh):
+            compiled = lowered.compile()
+        r = analysis.analyze(compiled)
+        out.append((r.flops, r.bytes_accessed, r.collective_bytes))
+    base = out[0]
+    delta = tuple(max(0.0, b - a) for a, b in zip(out[0], out[1]))
+    return base, delta
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool,
+               wire: str = "gather", compressor: str = "gspar",
+               rho: float = 0.01, remat: str | None = None,
+               train_mode: str | None = None, probe: bool = True,
+               attn_impl: str | None = None, q_chunk: int | None = None,
+               kv_chunk: int | None = None, shard_local_sync: bool = True):
+    """Lower+compile one (arch, shape, mesh) combination. Returns a record."""
+    spec = registry.get(arch)
+    if shape_name not in spec.shapes:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": spec.skip_notes.get(shape_name, "n/a")}
+    cfg = specs_lib.arch_model_for_shape(spec, shape_name)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if attn_impl is not None:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    if q_chunk is not None:
+        cfg = dataclasses.replace(cfg, attn_q_chunk=q_chunk)
+    if kv_chunk is not None:
+        cfg = dataclasses.replace(cfg, attn_kv_chunk=kv_chunk)
+    seq, global_batch, kind = registry.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mode = train_mode or spec.train_mode
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "kind": kind, "train_mode": mode if kind == "train" else "-",
+              "wire": wire if kind == "train" else "-"}
+
+    t0 = time.time()
+    lowered, params_sds = _build_lowered(cfg, spec, shape_name, mesh,
+                                         multi_pod, mode, wire, compressor,
+                                         rho, shard_local_sync)
+    record["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    with jax.set_mesh(mesh):
+        compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 1)
+
+    roof = analysis.analyze(compiled)
+    record["raw_flops"] = roof.flops
+    record["raw_collective_bytes"] = roof.collective_bytes
+
+    if probe:
+        # correct the scan-body undercount by linear extrapolation from
+        # unrolled 1- and 2-period probe modules
+        t2 = time.time()
+        base, delta = _probe_costs(cfg, spec, shape_name, mesh, multi_pod,
+                                   mode, wire, compressor, rho,
+                                   shard_local_sync)
+        record["probe_s"] = round(time.time() - t2, 1)
+        n_extra = cfg.num_periods - 1
+        flops = base[0] + n_extra * delta[0]
+        nbytes = base[1] + n_extra * delta[1]
+        coll = base[2] + n_extra * delta[2]
+        roof = dataclasses.replace(
+            roof, flops=flops, bytes_accessed=nbytes, collective_bytes=coll,
+            compute_s=flops / analysis.PEAK_FLOPS,
+            memory_s=nbytes / analysis.HBM_BW,
+            collective_s=coll / analysis.ICI_BW)
+        terms = {"compute": roof.compute_s, "memory": roof.memory_s,
+                 "collective": roof.collective_s}
+        roof = dataclasses.replace(roof, dominant=max(terms, key=terms.get))
+
+    n_dev = mesh.devices.size
+    total, active = count_params(cfg, params_sds)
+    tokens = global_batch * (seq if kind != "decode" else 1)
+    mf = analysis.model_flops(active, tokens, kind)
+    record.update(
+        status="ok", params_total=total, params_active=active,
+        model_flops=mf, model_flops_per_device=mf / n_dev,
+        useful_ratio=(mf / n_dev / roof.flops if roof.flops else 0.0),
+        **roof.row())
+    mem = compiled.memory_analysis()
+    record["memory_analysis"] = {
+        "argument_gb": mem.argument_size_in_bytes / 1e9,
+        "output_gb": mem.output_size_in_bytes / 1e9,
+        "temp_gb": mem.temp_size_in_bytes / 1e9,
+        "peak_gb": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 1e9,
+    }
+    return record
+
+
+def list_pairs():
+    out = []
+    for arch_id in registry.ID_TO_MODULE:
+        spec = registry.get(arch_id)
+        for shape in registry.SHAPES:
+            out.append((arch_id, shape,
+                        "run" if shape in spec.shapes else "skip"))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str)
+    ap.add_argument("--shape", type=str, choices=list(registry.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--wire", default="gather",
+                    choices=["dense", "gather", "packed"])
+    ap.add_argument("--compressor", default="gspar")
+    ap.add_argument("--rho", type=float, default=0.01)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--train-mode", default=None,
+                    choices=[None, "compressed", "fsdp"])
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--attn-impl", default=None, choices=[None, "naive", "chunked", "seq_parallel"])
+    ap.add_argument("--global-sync", action="store_true",
+                    help="disable shard-local compression (the C2 baseline)")
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--kv-chunk", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for arch, shape, st in list_pairs():
+            print(f"{arch:28s} {shape:12s} {st}")
+        return 0
+
+    rec = lower_pair(args.arch, args.shape, args.multi_pod, wire=args.wire,
+                     compressor=args.compressor, rho=args.rho,
+                     remat=args.remat, train_mode=args.train_mode,
+                     probe=not args.no_probe, attn_impl=args.attn_impl,
+                     q_chunk=args.q_chunk, kv_chunk=args.kv_chunk,
+                     shard_local_sync=not args.global_sync)
+    print(json.dumps(rec, indent=2, default=str))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    return 0 if rec.get("status") in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

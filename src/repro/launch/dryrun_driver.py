@@ -1,0 +1,90 @@
+"""Sweep driver: runs every (arch x shape x mesh) dry-run in a fresh
+subprocess (jax locks device count per process), caching results as JSON.
+Resumable: existing result files are skipped.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_driver --results results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun_driver --only gemma2-9b:train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCH_IDS = [
+    "gemma2-9b", "gemma-2b", "paligemma-3b", "seamless-m4t-large-v2",
+    "starcoder2-7b", "phi3.5-moe-42b-a6.6b", "deepseek-v2-236b",
+    "rwkv6-1.6b", "zamba2-2.7b", "gemma2-27b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, out: str,
+            timeout: int = 3000, extra: list[str] | None = None) -> dict:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", out]
+    if multi_pod:
+        cmd += ["--multi-pod", "--no-probe"]   # roofline table is single-pod
+    cmd += extra or []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))))
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                              timeout=timeout)
+        ok = proc.returncode == 0
+        err = proc.stderr[-2000:] if not ok else ""
+    except subprocess.TimeoutExpired:
+        ok, err = False, f"timeout after {timeout}s"
+    if not ok and not os.path.exists(out):
+        rec = {"arch": arch, "shape": shape,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "failed", "error": err,
+               "wall_s": round(time.time() - t0, 1)}
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=2)
+    return {"ok": ok, "wall_s": round(time.time() - t0, 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--only", default=None,
+                    help="comma list of arch:shape filters")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--redo", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.results, exist_ok=True)
+    only = (set(args.only.split(",")) if args.only else None)
+    meshes = args.meshes.split(",")
+
+    jobs = []
+    for mesh in meshes:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                key = f"{arch}:{shape}"
+                if only and key not in only:
+                    continue
+                jobs.append((arch, shape, mesh == "multi"))
+
+    for arch, shape, mp in jobs:
+        tag = "multi" if mp else "single"
+        out = os.path.join(args.results,
+                           f"{arch.replace('.', '')}_{shape}_{tag}.json")
+        if os.path.exists(out) and not args.redo:
+            print(f"SKIP {arch} {shape} {tag} (cached)", flush=True)
+            continue
+        print(f"RUN  {arch} {shape} {tag} ...", flush=True)
+        res = run_one(arch, shape, mp, out, timeout=args.timeout)
+        status = "ok" if res["ok"] else "FAIL"
+        print(f"     -> {status} in {res['wall_s']}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) pair — the
+weak-type-correct, shardable, zero-allocation inputs the dry-run lowers
+against. Nothing in this module touches device memory."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.dist import sharding as shd
+from repro.models import transformer as tf
+from repro.models.common import split_params
+
+
+def arch_model_for_shape(spec: registry.ArchSpec, shape_name: str) -> tf.ModelConfig:
+    """Shape-specific config tweaks (e.g. seamless frame count follows seq)."""
+    cfg = spec.model
+    seq, _, kind = registry.SHAPES[shape_name]
+    if cfg.modality == "audio":
+        from repro.configs.seamless_m4t_large_v2 import frames_for
+        cfg = dataclasses.replace(cfg, prefix_len=frames_for(seq))
+    return cfg
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=sharding)
+
+
+def batch_rules(rules: dict, multi_pod: bool) -> P:
+    return P(("pod", "data") if multi_pod else ("data",))
+
+
+def param_structs(cfg: tf.ModelConfig, rules: dict, mesh):
+    """(params SDS tree with shardings, axes tree)."""
+    p_tree = jax.eval_shape(functools.partial(tf.init_model, cfg=cfg),
+                            jax.random.key(0))
+    vals, axes = split_params(p_tree)
+    shardings = shd.tree_shardings(vals, axes, rules, mesh)
+    sds = jax.tree.map(lambda v, s: _sds(v.shape, v.dtype, s), vals, shardings)
+    return sds, axes
+
+
+def opt_state_structs(opt, params_sds, axes, opt_rules: dict, mesh):
+    state = jax.eval_shape(opt.init, params_sds)
+    def shard_like(sub):
+        # moments mirror param axes; scalars replicated
+        return shd.tree_shardings(sub, axes, opt_rules, mesh)
+    out = {}
+    for k, v in state.items():
+        if k in ("m", "v", "mu", "ref_params", "ref_grad"):
+            sh = shard_like(v)
+            out[k] = jax.tree.map(lambda s, h: _sds(s.shape, s.dtype, h), v, sh)
+        else:
+            out[k] = jax.tree.map(
+                lambda s: _sds(s.shape, s.dtype, NamedSharding(mesh, P())), v)
+    return out
+
+
+def train_batch_structs(cfg: tf.ModelConfig, shape_name: str, mesh,
+                        multi_pod: bool) -> dict:
+    seq, global_batch, _ = registry.SHAPES[shape_name]
+    bspec = batch_rules({}, multi_pod)
+    bshard = NamedSharding(mesh, bspec)
+    batch: dict[str, Any] = {
+        "tokens": _sds((global_batch, seq), jnp.int32, bshard)}
+    if cfg.modality == "vision" and cfg.prefix_len:
+        batch["prefix"] = _sds((global_batch, cfg.prefix_len, cfg.d_model),
+                               jnp.bfloat16, bshard)
+    if cfg.encoder_periods:
+        batch["enc_embeds"] = _sds((global_batch, cfg.prefix_len, cfg.d_model),
+                                   jnp.bfloat16, bshard)
+    return batch
+
+
+def cache_structs(cfg: tf.ModelConfig, shape_name: str, rules: dict, mesh):
+    seq, global_batch, _ = registry.SHAPES[shape_name]
+    max_seq = seq + (cfg.prefix_len if cfg.modality == "vision" else 0)
+    vals, axes = tf.model_cache_spec(cfg, global_batch, max_seq)
+    shardings = shd.tree_shardings(vals, axes, rules, mesh)
+    sds = jax.tree.map(lambda v, s: _sds(v.shape, v.dtype, s), vals, shardings)
+    return sds, axes

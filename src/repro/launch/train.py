@@ -1,0 +1,119 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-9b --smoke \
+        --steps 50 --compressor gspar --rho 0.05 --wire gather
+
+On real hardware the full config + production mesh is selected automatically;
+on this CPU container use --smoke (reduced config, single device) or set
+XLA_FLAGS=--xla_force_host_platform_device_count=N --mesh NxM for a fake
+multi-device run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint
+from repro.configs import registry
+from repro.core.api import CompressionConfig
+from repro.data.synthetic import token_batch
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.models import transformer as tf
+from repro.models.common import split_params
+from repro.optim.optimizers import adam, sgd
+from repro.train import step as step_lib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adam", choices=["adam", "sgd"])
+    ap.add_argument("--compressor", default="gspar",
+                    choices=["gspar", "unisp", "topk", "qsgd", "terngrad", "none"])
+    ap.add_argument("--rho", type=float, default=0.05)
+    ap.add_argument("--wire", default="dense",
+                    choices=["dense", "gather", "packed"])
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 4x2 => (data=4, model=2); default: all-data")
+    ap.add_argument("--mode", default=None, choices=[None, "compressed", "fsdp"])
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    spec = registry.get(args.arch)
+    cfg = spec.smoke if args.smoke else spec.model
+    n_dev = len(jax.devices())
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh(shape, ("data", "model")[:len(shape)] if len(shape) < 3
+                         else ("pod", "data", "model"))
+    elif not args.smoke and n_dev >= 256:
+        mesh = make_production_mesh(multi_pod=(n_dev >= 512))
+    else:
+        mesh = make_mesh((n_dev, 1), ("data", "model"))
+    multi_pod = "pod" in mesh.axis_names
+    mode = args.mode or spec.train_mode
+
+    rules = dict(shd.DP_RULES if mode == "compressed" else shd.FSDP_RULES)
+    rules.update(spec.rules_overrides)
+    if multi_pod:
+        rules = shd.with_pod(rules)
+
+    print(f"arch={cfg.name} layers={cfg.num_layers} d_model={cfg.d_model} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} mode={mode}")
+
+    params, _ = split_params(tf.init_model(jax.random.key(0), cfg))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"params: {n_params / 1e6:.1f}M")
+
+    opt = (adam(args.lr) if args.optimizer == "adam" else sgd(args.lr))
+    opt_state = opt.init(params)
+    comp = CompressionConfig(name=args.compressor, rho=args.rho,
+                             wire=args.wire, min_leaf_size=1024)
+    with jax.set_mesh(mesh):
+        if mode == "compressed":
+            train_step = jax.jit(step_lib.make_compressed_train_step(
+                cfg, comp, opt, mesh, rules, multi_pod=multi_pod))
+        else:
+            train_step = jax.jit(step_lib.make_fsdp_train_step(
+                cfg, comp, opt, mesh, rules))
+
+        key = jax.random.key(1)
+        t0 = time.time()
+        for step_i in range(args.steps):
+            key, k_data, k_q = jax.random.split(key, 3)
+            batch = token_batch(k_data, cfg.vocab, args.batch, args.seq)
+            params, opt_state, metrics = train_step(params, opt_state, batch,
+                                                    k_q)
+            if step_i % args.log_every == 0 or step_i == args.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                msg = (f"step {step_i:>5} loss {m['loss']:.4f}")
+                if "density" in m:
+                    msg += (f" density {m['density']:.4f}"
+                            f" var x{m['var_ratio']:.2f}"
+                            f" msg_bits {m['bits']:.3g}"
+                            f" (dense {m['dense_bits']:.3g})")
+                print(msg, flush=True)
+        dt = time.time() - t0
+        print(f"done: {args.steps} steps in {dt:.1f}s "
+              f"({args.steps / dt:.2f} steps/s)")
+
+    if args.checkpoint:
+        checkpoint.save(args.checkpoint, {"params": params, "opt": opt_state},
+                        extra={"arch": args.arch, "steps": args.steps})
+        print(f"checkpoint -> {args.checkpoint}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Parameter containers and init helpers for the pure-JAX model zoo.
+
+A model's ``init`` returns a pytree whose leaves are ``Param(value, axes)``;
+``split_params`` separates it into a value tree (what jit/optimizers see) and
+a static axes tree (what the sharding rules consume). Models are plain
+functions ``apply(values, ...)``; the axes tree travels alongside in
+ModelBundle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Param:
+    value: jax.Array
+    axes: tuple = dataclasses.field(metadata=dict(static=True), default=())
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree: Any) -> tuple[Any, Any]:
+    """(Param tree) -> (values tree, axes tree) with identical structure."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+class Initializer:
+    """Stateful PRNG splitter so init code reads linearly."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+
+    def _next(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def normal(self, shape, axes, stddev=0.02) -> Param:
+        v = jax.random.normal(self._next(), shape, self.dtype) * stddev
+        return Param(v, tuple(axes))
+
+    def fan_in(self, shape, axes, in_dim_idx=0) -> Param:
+        scale = 1.0 / max(1, shape[in_dim_idx]) ** 0.5
+        v = jax.random.normal(self._next(), shape, self.dtype) * scale
+        return Param(v, tuple(axes))
+
+    def zeros(self, shape, axes) -> Param:
+        return Param(jnp.zeros(shape, self.dtype), tuple(axes))
+
+    def ones(self, shape, axes) -> Param:
+        return Param(jnp.ones(shape, self.dtype), tuple(axes))
+
+    def constant(self, value, shape, axes) -> Param:
+        return Param(jnp.full(shape, value, self.dtype), tuple(axes))
+
+
+def stack_layers(init_fn: Callable[[Initializer], Any], key: jax.Array,
+                 n: int, dtype=jnp.float32) -> Any:
+    """Initialize n copies of a block and stack each leaf along a leading
+    `layers` axis (for scan-over-layers)."""
+    keys = jax.random.split(key, n)
+    trees = [init_fn(Initializer(k, dtype)) for k in keys]
+    def stack(*ps):
+        return Param(jnp.stack([p.value for p in ps]), ("layers",) + ps[0].axes)
+    return jax.tree.map(stack, *trees, is_leaf=is_param)
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    """Everything the launcher needs about an instantiated model."""
+    params: Any                      # value tree
+    param_axes: Any                  # logical-axes tree (static)
+    apply_train: Callable            # (params, batch) -> scalar loss
+    apply_prefill: Callable | None   # (params, batch) -> (logits, cache)
+    apply_decode: Callable | None    # (params, cache, tokens) -> (logits, cache)
+    init_cache: Callable | None      # (batch, seq) -> cache value tree
+    cache_axes: Any | None = None    # logical-axes tree for the cache

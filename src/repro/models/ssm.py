@@ -1,0 +1,322 @@
+"""Recurrent sequence mixers: RWKV-6 "Finch" (data-dependent per-channel decay)
+and Mamba-2 (SSD, scalar-per-head decay). Both use a chunked formulation:
+within a chunk the recurrence is materialized as (MXU-friendly) matmuls with
+relative-decay factors, and a lax.scan carries the state across chunks —
+O(T) work, O(T/L) scan depth. Decode is the exact single-step recurrence.
+
+Numerics: all recurrence math in fp32; decays live in log space.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Initializer
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """Token shift: y_t = x_{t-1}; y_0 = last (or 0). x [B, T, d]."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+# ===========================================================================
+# RWKV-6
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    head_dim: int = 64
+    d_ff: int = 0                 # channel-mix hidden (3.5x d_model in Finch)
+    tm_lora: int = 32             # token-mix lora rank
+    w_lora: int = 64              # decay lora rank
+    chunk: int = 64
+    unroll: bool = False          # unroll the chunk scan (cost-probe mode)
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def init_rwkv6_time_mix(ini: Initializer, cfg: RWKV6Config):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "mu_x": ini.zeros((d,), ("embed",)),
+        "mu": ini.zeros((5, d), (None, "embed")),
+        "lora_a": ini.normal((d, 5 * cfg.tm_lora), ("embed", None), stddev=0.01),
+        "lora_b": ini.normal((5, cfg.tm_lora, d), (None, None, "embed"), stddev=0.01),
+        "w0": ini.constant(-4.0, (d,), ("embed",)),   # mild initial decay
+        "w_lora_a": ini.normal((d, cfg.w_lora), ("embed", None), stddev=0.01),
+        "w_lora_b": ini.normal((cfg.w_lora, d), (None, "embed"), stddev=0.01),
+        "wr": ini.fan_in((d, d), ("embed", "heads")),
+        "wk": ini.fan_in((d, d), ("embed", "heads")),
+        "wv": ini.fan_in((d, d), ("embed", "heads")),
+        "wg": ini.fan_in((d, d), ("embed", "heads")),
+        "u": ini.normal((h, hd), ("heads", "head_dim"), stddev=0.5),
+        "ln_scale": ini.ones((d,), ("embed",)),
+        "ln_bias": ini.zeros((d,), ("embed",)),
+        "wo": ini.fan_in((d, d), ("heads", "embed")),
+    }
+
+
+def init_rwkv6_channel_mix(ini: Initializer, cfg: RWKV6Config):
+    d, f = cfg.d_model, cfg.d_ff
+    return {"mu_k": ini.zeros((d,), ("embed",)),
+            "mu_r": ini.zeros((d,), ("embed",)),
+            "wk": ini.fan_in((d, f), ("embed", "mlp")),
+            "wv": ini.fan_in((f, d), ("mlp", "embed")),
+            "wr": ini.fan_in((d, d), ("embed", "embed"))}
+
+
+def _rwkv_mix_streams(p, x, xprev):
+    """Data-dependent token-shift interpolation for the 5 streams (r,k,v,w,g)."""
+    dx = xprev - x
+    xxx = x + dx * p["mu_x"]
+    t = x.shape[-2]
+    lora = jnp.tanh(xxx @ p["lora_a"])
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)              # [..., 5, rank]
+    dyn = jnp.einsum("...tfm,fmd->...tfd", lora, p["lora_b"])  # [..., T, 5, d]
+    mixed = x[..., None, :] + dx[..., None, :] * (p["mu"] + dyn)
+    return [mixed[..., i, :] for i in range(5)]               # r,k,v,w,g inputs
+
+
+def _group_norm(x, scale, bias, eps=64e-5):
+    """Per-head layer norm: x [..., h, hd], scale/bias [h*hd]."""
+    mean = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    n = (x - mean) * jax.lax.rsqrt(var + eps)
+    flat = n.reshape(*n.shape[:-2], -1)
+    return flat * scale + bias
+
+
+def _wkv_chunk(carry, inputs, u):
+    """One chunk, batched over [B, H]. r,k,v [B,L,H,hd]; logw [B,L,H,hd] (<=0).
+    State S [B,H,hd_k,hd_v]. Returns out [B,L,H,hd]."""
+    S = carry
+    r, k, v, logw = inputs
+    logA = jnp.cumsum(logw, axis=1)                   # [B,L,H,K]
+    a_prev = jnp.exp(logA - logw)                     # A_{t-1}
+    a_end = jnp.exp(logA[:, -1])                      # [B,H,K]
+    rp = r * a_prev
+    kd = k * jnp.exp(-logA)
+    scores = jnp.einsum("blhk,bmhk->bhlm", rp, kd)
+    L = r.shape[1]
+    tri = jnp.tril(jnp.ones((L, L), bool), -1)
+    scores = jnp.where(tri[None, None], scores, 0.0)
+    diag = jnp.einsum("blhk,blhk,hk->blh", r, k, u)   # bonus term
+    out = jnp.einsum("bhlm,bmhv->blhv", scores, v)
+    out += jnp.einsum("blhk,bhkv->blhv", rp, S)
+    out += diag[..., None] * v
+    k_end = k * jnp.exp(logA[:, -1][:, None] - logA)  # decay to chunk end
+    S_new = a_end[..., None] * S + jnp.einsum("blhk,blhv->bhkv", k_end, v)
+    return S_new, out
+
+
+def rwkv6_time_mix(p, cfg: RWKV6Config, x, state=None):
+    """x [B,T,d]; state None (train, zeros) or dict (decode prefill carry).
+    Returns (out [B,T,d], new_state)."""
+    b, t, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    last_x = state["x_tm"] if state is not None else None
+    S0 = state["S"] if state is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    xprev = _shift(x, last_x)
+    xr, xk, xv, xw, xg = _rwkv_mix_streams(p, x, xprev)
+    r = (xr @ p["wr"]).reshape(b, t, h, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, t, h, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, t, h, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = -jnp.exp(p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"])
+    logw = logw.reshape(b, t, h, hd).astype(jnp.float32)
+
+    L = min(cfg.chunk, t)
+    assert t % L == 0, f"seq {t} not divisible by chunk {L}"
+    nc = t // L
+    def to_chunks(a):
+        return a.reshape(b, nc, L, h, hd).swapaxes(0, 1)      # [nc,B,L,H,hd]
+    u = p["u"].astype(jnp.float32)
+    S_fin, outs = jax.lax.scan(
+        lambda c, i: _wkv_chunk(c, i, u), S0,
+        (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(logw)),
+        unroll=cfg.unroll)
+    out = outs.swapaxes(0, 1).reshape(b, t, h, hd)
+
+    out = _group_norm(out, p["ln_scale"].astype(jnp.float32),
+                      p["ln_bias"].astype(jnp.float32))
+    out = (out.astype(x.dtype) * g) @ p["wo"]
+    new_state = {"x_tm": x[:, -1], "S": S_fin}
+    return out, new_state
+
+
+def rwkv6_time_mix_step(p, cfg: RWKV6Config, x, state):
+    """Exact single-token recurrence. x [B,1,d]."""
+    b, _, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    xprev = state["x_tm"][:, None]
+    xr, xk, xv, xw, xg = _rwkv_mix_streams(p, x, xprev)
+    r = (xr @ p["wr"]).reshape(b, h, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, h, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, h, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])[:, 0]
+    w = jnp.exp(-jnp.exp(p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]))
+    w = w.reshape(b, h, hd).astype(jnp.float32)
+
+    S = state["S"]                                    # [B,H,K,V]
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    att = S + p["u"].astype(jnp.float32)[None, :, :, None] * kv
+    out = jnp.einsum("bhk,bhkv->bhv", r, att)
+    S_new = w[..., None] * S + kv
+    out = _group_norm(out, p["ln_scale"].astype(jnp.float32),
+                      p["ln_bias"].astype(jnp.float32))
+    out = (out.astype(x.dtype) * g) @ p["wo"]
+    return out[:, None], {"x_tm": x[:, -1], "S": S_new}
+
+
+def rwkv6_channel_mix(p, x, state=None):
+    last = state["x_cm"] if state is not None else None
+    xprev = _shift(x, last)
+    dx = xprev - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, {"x_cm": x[:, -1]}
+
+
+def init_rwkv6_state(cfg: RWKV6Config, batch: int, dtype=jnp.bfloat16):
+    h, hd = cfg.num_heads, cfg.head_dim
+    state = {"x_tm": jnp.zeros((batch, cfg.d_model), dtype),
+             "x_cm": jnp.zeros((batch, cfg.d_model), dtype),
+             "S": jnp.zeros((batch, h, hd, hd), jnp.float32)}
+    axes = {"x_tm": ("batch", "embed"), "x_cm": ("batch", "embed"),
+            "S": ("batch", "heads", "head_dim", "state")}
+    return state, axes
+
+
+# ===========================================================================
+# Mamba-2 (SSD)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 64
+    unroll: bool = False          # unroll the chunk scan (cost-probe mode)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def init_mamba2(ini: Initializer, cfg: Mamba2Config):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.num_heads
+    return {
+        "in_proj": ini.fan_in((d, 2 * di + 2 * n + h), ("embed", "mlp")),
+        "conv_w": ini.normal((cfg.conv_width, cfg.conv_dim), ("conv", "mlp"),
+                             stddev=0.1),
+        "conv_b": ini.zeros((cfg.conv_dim,), ("mlp",)),
+        "a_log": ini.constant(0.0, (h,), ("heads",)),      # A = -exp(a_log)
+        "dt_bias": ini.constant(-2.0, (h,), ("heads",)),   # small initial dt
+        "d_skip": ini.ones((h,), ("heads",)),
+        "norm_scale": ini.ones((di,), ("mlp",)),
+        "out_proj": ini.fan_in((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x [B,T,C], w [W,C]. state [B,W-1,C] or None."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width)) + b
+    new_state = xp[:, -(width - 1):]
+    return out, new_state
+
+
+def _ssd_chunk(carry, inputs):
+    """One SSD chunk, batched. x [B,L,H,hd]; Bm/Cm [B,L,N]; loga/dt [B,L,H].
+    State S [B,H,N,hd]."""
+    S = carry
+    x, Bm, Cm, loga, dt = inputs
+    logA = jnp.cumsum(loga, axis=1)                    # [B,L,H]
+    decay_end = jnp.exp(logA[:, -1])                   # [B,H]
+    # intra-chunk: scores[t,s] = exp(logA_t - logA_s) * (C_t . B_s) * dt_s
+    rel = logA[:, :, None, :] - logA[:, None, :, :]    # [B,L,L,H]
+    L = x.shape[1]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    rel = jnp.where(tri[None, :, :, None], rel, -jnp.inf)
+    cb = jnp.einsum("bln,bmn->blm", Cm, Bm)            # [B,L,L]
+    scores = jnp.exp(rel) * cb[..., None] * dt[:, None, :, :]
+    y = jnp.einsum("blmh,bmhd->blhd", scores, x)
+    # inter-chunk: y_t += exp(logA_t) * C_t^T S0
+    y += jnp.exp(logA)[..., None] * jnp.einsum("bln,bhnd->blhd", Cm, S)
+    # state update
+    w_end = jnp.exp(logA[:, -1][:, None] - logA) * dt  # [B,L,H]
+    S_new = (decay_end[..., None, None] * S
+             + jnp.einsum("blh,bln,blhd->bhnd", w_end, Bm, x))
+    return S_new, y
+
+
+def mamba2_mix(p, cfg: Mamba2Config, x, state=None):
+    """x [B,T,d] -> (out [B,T,d], new_state {conv, S})."""
+    b, t, d = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.d_state, cfg.num_heads, cfg.head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # [B,T,H]
+    loga = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt           # [B,T,H]
+    xh = xs.reshape(b, t, h, hd).astype(jnp.float32)
+    Bm32, Cm32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    S0 = (state["S"] if state is not None
+          else jnp.zeros((b, h, n, hd), jnp.float32))
+    L = min(cfg.chunk, t)
+    assert t % L == 0
+    nc = t // L
+    ch = lambda a: a.reshape(b, nc, L, *a.shape[2:]).swapaxes(0, 1)
+    S_fin, ys = jax.lax.scan(_ssd_chunk, S0,
+                             (ch(xh), ch(Bm32), ch(Cm32), ch(loga), ch(dt)),
+                             unroll=cfg.unroll)
+    y = ys.swapaxes(0, 1).reshape(b, t, h, hd)
+    y = y + p["d_skip"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(b, t, di).astype(x.dtype)
+
+    # gated RMSNorm (mamba2) then out projection
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+    y = y * p["norm_scale"]
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv.astype(x.dtype), "S": S_fin}
+
+
+def init_mamba2_state(cfg: Mamba2Config, batch: int, dtype=jnp.bfloat16):
+    state = {"conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), dtype),
+             "S": jnp.zeros((batch, cfg.num_heads, cfg.d_state, cfg.head_dim),
+                            jnp.float32)}
+    axes = {"conv": ("batch", "conv", "mlp"),
+            "S": ("batch", "heads", "state", "head_dim")}
+    return state, axes

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import OPTIMIZERS, SVRG, Optimizer, adam, make_optimizer, sgd
+
+__all__ = ["OPTIMIZERS", "SVRG", "Optimizer", "adam", "make_optimizer", "sgd"]

@@ -1,0 +1,129 @@
+"""Pure-pytree optimizers: SGD (+momentum), Adam, and SVRG-style control
+variates. No optax dependency — state is a plain pytree of jnp arrays so it
+shards under GSPMD exactly like the parameters.
+
+Step-size conventions from the paper's experiments:
+  * sparsified SGD:  eta_t ∝ 1 / (t * var)   (variance-adaptive, section 5.1)
+  * sparsified SVRG: eta   ∝ 1 / var
+where ``var = ||Q(g)||^2 / ||g||^2`` — optimizers accept an optional
+``var_scale`` to implement this without special-casing the paper's runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]   # (grads, state, params, **kw) -> (new_params, new_state)
+
+
+def _tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array], momentum: float = 0.0,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        step = jnp.zeros((), jnp.int32)
+        if momentum:
+            return {"step": step, "mu": jax.tree.map(jnp.zeros_like, params)}
+        return {"step": step}
+
+    def update(grads, state, params, var_scale=1.0):
+        step = state["step"] + 1
+        eta = (lr(step) if callable(lr) else lr) / var_scale
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            new_params = jax.tree.map(lambda p, m: p - eta * m, params, mu)
+            return new_params, {"step": step, "mu": mu}
+        new_params = jax.tree.map(lambda p, g: p - eta * g, params, grads)
+        return new_params, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
+         b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0,
+         moment_dtype=jnp.float32) -> Optimizer:
+    """Adam/AdamW. ``moment_dtype=jnp.bfloat16`` halves optimizer memory
+    (beyond-paper memory optimization used by the 236B dry-run config)."""
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, var_scale=1.0):
+        step = state["step"] + 1
+        eta = (lr(step) if callable(lr) else lr) / var_scale
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            upd_ = m_new / bc1 / (jnp.sqrt(v_new / bc2) + eps)
+            if weight_decay:
+                upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - eta * upd_).astype(p.dtype),
+                    m_new.astype(moment_dtype), v_new.astype(moment_dtype))
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_flatten(grads)[0]
+        flat_m = jax.tree_util.tree_flatten(state["m"])[0]
+        flat_v = jax.tree_util.tree_flatten(state["v"])[0]
+        outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+        return new_p, {"step": step, "m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+@dataclasses.dataclass(frozen=True)
+class SVRG:
+    """SVRG control variate (Johnson & Zhang 2013), the paper's second base
+    algorithm. Holds a reference point w~ and its full gradient; the variance
+    -reduced stochastic gradient is  g(w) - g(w~) + full_grad(w~).
+
+    The *sparsified* variant Q(g(w) - g(w~)) + full_grad(w~) is the paper's
+    equation (15): the full reference gradient stays dense on every worker
+    (one broadcast per epoch), only the correction is sparsified.
+    """
+    inner: Optimizer
+
+    def init(self, params):
+        return {"opt": self.inner.init(params),
+                "ref_params": jax.tree.map(jnp.copy, params),
+                "ref_grad": jax.tree.map(jnp.zeros_like, params)}
+
+    def set_reference(self, state, params, full_grad):
+        return {**state, "ref_params": jax.tree.map(jnp.copy, params),
+                "ref_grad": full_grad}
+
+    def correct(self, state, grads_w, grads_ref):
+        """g(w) - g(w~); add state['ref_grad'] after (optional) sparsification."""
+        return jax.tree.map(lambda a, b: a - b, grads_w, grads_ref)
+
+    def update(self, vr_grads, state, params, var_scale=1.0):
+        new_params, opt_state = self.inner.update(vr_grads, state["opt"], params,
+                                                  var_scale=var_scale)
+        return new_params, {**state, "opt": opt_state}
+
+
+OPTIMIZERS = {"sgd": sgd, "adam": adam}
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name not in OPTIMIZERS:
+        raise ValueError(f"unknown optimizer {name!r}")
+    return OPTIMIZERS[name](lr, **kw)

@@ -1,0 +1,145 @@
+"""Three-term roofline analysis from compiled XLA artifacts (deliverable g).
+
+This container is CPU-only; TPU v5e is the *target*. We therefore derive:
+
+    compute_s    = HLO_FLOPs  / (peak_flops)          per chip
+    memory_s     = HLO_bytes  / (hbm_bw)              per chip
+    collective_s = collective_bytes / (ici_bw)        per chip
+
+from ``compiled.cost_analysis()`` (FLOPs, bytes accessed — the SPMD module is
+already the per-device program) and from parsing the optimized HLO for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops (collective bytes are NOT in cost_analysis).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "fp8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[16,128]{1,0} all-gather(%x), ...
+#        ROOT %tuple ... f32[] ...
+_OP_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_TUPLE_RE = re.compile(
+    r"=\s*\(((?:[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?,?\s*)+)\)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int]
+    count_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in the (optimized,
+    per-device) HLO. '-start' ops are counted; their '-done' twins are not
+    (avoid double counting async pairs)."""
+    bytes_by: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count_by: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done." in line:
+            continue
+        mt = _TUPLE_RE.search(line)       # tuple shapes first (variadic ops)
+        if mt:
+            shapes, kind = mt.groups()
+            for dtype, dims in _SHAPE_RE.findall(shapes):
+                bytes_by[kind] += _shape_bytes(dtype, dims)
+            count_by[kind] += 1
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            bytes_by[kind] += _shape_bytes(dtype, dims)
+            count_by[kind] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    peak_memory_bytes: float | None = None
+    collective_detail: dict | None = None
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, lowered_text: str | None = None) -> Roofline:
+    """Build the three-term roofline from a compiled executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):        # some backends return [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll.total_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                     + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    except Exception:
+        pass
+    return Roofline(flops=flops, bytes_accessed=bytes_accessed,
+                    collective_bytes=float(coll.total_bytes),
+                    compute_s=compute_s, memory_s=memory_s,
+                    collective_s=collective_s, dominant=dominant,
+                    peak_memory_bytes=peak,
+                    collective_detail={"bytes": coll.bytes_by_kind,
+                                       "count": coll.count_by_kind})
+
+
+def model_flops(n_params_active: float, tokens: float,
+                kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D for training (2 fwd + 4 bwd per param-token) and
+    2*N*D for inference; N = active params for MoE."""
+    per = 6.0 if kind == "train" else 2.0
+    return per * n_params_active * tokens

@@ -1,0 +1,21 @@
+"""Loss functions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def shift_targets(tokens: jax.Array, pad_id: int = 0):
+    """Next-token targets + mask; the final position is masked out."""
+    targets = jnp.roll(tokens, -1, axis=-1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    return targets, mask
+
+
+def lm_loss(logits: jax.Array, targets: jax.Array, mask: jax.Array) -> jax.Array:
+    """Token-mean cross entropy in fp32."""
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,234 @@
+"""Train-step builders.
+
+Two distribution modes:
+
+  compressed (paper-faithful, Algorithm 1)
+      The data (and pod) mesh axes are *manual* (jax.shard_map partial-manual;
+      the model/tensor axis stays auto under GSPMD). Each data replica computes
+      its local gradient with NO automatic cross-replica reduction, sparsifies
+      it per leaf (Q(g), section 3), and the replicas exchange compressed
+      messages via repro.comm.sync_tree. Parameters are replicated across the
+      data axis inside the step (ZeRO-1 layout: optimizer state may still be
+      sharded outside).
+
+  fsdp (baseline / giant models)
+      Pure GSPMD: XLA inserts dense reduce-scatter/all-gather. Optionally
+      applies Q() to the *averaged* gradient (Algorithm 1, step 7) which is
+      sharding-agnostic and keeps unbiasedness.
+
+Both return metrics including the paper's `var` ratio and message-bit
+accounting so benchmarks can plot loss-vs-communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.comm.sync import sync_tree
+from repro.core.api import CompressionConfig, compress_tree
+from repro.dist import sharding as shd
+from repro.models import transformer
+from repro.models.common import split_params
+from repro.optim.optimizers import Optimizer
+from repro.train.loss import lm_loss, shift_targets
+
+
+def make_loss_fn(cfg: transformer.ModelConfig) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = transformer.forward_train(params, cfg, batch)
+        targets, mask = shift_targets(batch["tokens"])
+        if "loss_mask" in batch:
+            mask = mask * batch["loss_mask"]
+        return lm_loss(logits, targets, mask) + aux
+    return loss_fn
+
+
+def _strip_manual(rules: dict, manual: tuple[str, ...]) -> dict:
+    """Activation rules usable inside a shard_map where `manual` axes are
+    already manual: drop them from every entry."""
+    out = {}
+    for k, v in rules.items():
+        axes = shd._as_tuple(v)
+        kept = tuple(a for a in axes if a not in manual)
+        out[k] = kept if kept else None
+    return out
+
+
+def make_compressed_train_step(cfg: transformer.ModelConfig,
+                               comp: CompressionConfig,
+                               opt: Optimizer,
+                               mesh,
+                               rules: dict,
+                               multi_pod: bool = False,
+                               var_adaptive_lr: bool = False,
+                               shard_local_sync: bool = True) -> Callable:
+    """Algorithm 1 as one jittable step: (params, opt_state, batch, key) ->
+    (params, opt_state, metrics).
+
+    shard_local_sync: compress each tensor-parallel shard's gradient slice
+    locally (nested shard_map over the model axis). Without it the top_k /
+    probability computation runs on model-GLOBAL leaves and GSPMD all-gathers
+    every gradient across the model axis (measured 465 GB/step/device on
+    gemma2-27b train_4k — see EXPERIMENTS.md section Perf iter C2).
+    Per-shard sparsification keeps the estimator unbiased (each shard is an
+    independent Q over its coordinates)."""
+    loss_fn = make_loss_fn(cfg)
+    manual = ("pod", "data") if multi_pod else ("data",)
+    inner_rules = _strip_manual(rules, manual)
+    batch_spec = P(tuple(a for a in manual))   # batch dim sharded over manual axes
+
+    # mark scan-over-layers stacks so compression runs per layer (paper 5.2)
+    param_tree = jax.eval_shape(lambda k: transformer.init_model(k, cfg),
+                                jax.random.key(0))
+    vals_sds, param_axes = split_params(param_tree)
+    def _is_axes(t):
+        return isinstance(t, tuple) and all(isinstance(e, (str, type(None)))
+                                            for e in t)
+    stacked = jax.tree.map(lambda ax: len(ax) > 0 and ax[0] == "layers",
+                           param_axes, is_leaf=_is_axes)
+    # per-leaf model-axis specs (for the nested manual sync region)
+    grad_specs = jax.tree.map(
+        lambda v, ax: shd.resolve_spec(v.shape, ax, inner_rules, mesh),
+        vals_sds, param_axes,
+        is_leaf=lambda t: _is_axes(t) or hasattr(t, "shape"))
+
+    pod_axis = "pod" if multi_pod else None
+
+    def _spec_with(prefix, spec: P) -> P:
+        return P(prefix, *tuple(spec))
+
+    # grads leave the grad region stacked on a leading per-worker axis
+    # (sharded over the manual axes); the sync region re-binds data(+pod)
+    # AND model as manual, so compression is fully shard-local. SDY forbids
+    # nested manual regions over the same axis, hence two sequential maps.
+    worker_prefix = tuple(manual) if len(manual) > 1 else manual[0]
+    stacked_specs = jax.tree.map(
+        lambda s: _spec_with(worker_prefix, s), grad_specs,
+        is_leaf=lambda t: isinstance(t, P))
+
+    def grad_fn(params, batch):
+        with shd.activation_sharding(inner_rules, mesh):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss = jax.lax.pmean(loss, manual)
+        return loss, jax.tree.map(lambda g: g[None], grads)
+
+    # out_specs of a partial-manual region may only name ITS manual axes;
+    # the model-dim sharding of each leaf stays auto here and is re-bound
+    # manually by the sync region below.
+    grad_out_specs = jax.tree.map(lambda s: P(worker_prefix), grad_specs,
+                                  is_leaf=lambda t: isinstance(t, P))
+    grad_sharded = jax.shard_map(
+        grad_fn, mesh=mesh, in_specs=(P(), batch_spec),
+        out_specs=(P(), grad_out_specs),
+        axis_names=set(manual), check_vma=False)
+
+    sync_axes = set(manual) | ({"model"} if shard_local_sync else set())
+
+    def sync_fn(grads_stacked, key):
+        grads = jax.tree.map(lambda g: g[0], grads_stacked)
+        for a in sorted(sync_axes):
+            key = jax.random.fold_in(key, jax.lax.axis_index(a))
+        synced, stats = sync_tree(comp, key, grads, data_axis="data",
+                                  pod_axis=pod_axis, stacked=stacked,
+                                  fold_worker_key=False)
+        if shard_local_sync:
+            # each model shard sends its own message: totals sum, ratios avg
+            stats = type(stats)(
+                bits=jax.lax.psum(stats.bits, "model"),
+                dense_bits=jax.lax.psum(stats.dense_bits, "model"),
+                wire_bytes=jax.lax.psum(stats.wire_bytes, "model"),
+                density=jax.lax.pmean(stats.density, "model"),
+                var_ratio=jax.lax.pmean(stats.var_ratio, "model"),
+                overflow=jax.lax.psum(stats.overflow, "model"))
+        stats = jax.tree.map(lambda s: jax.lax.pmean(s, manual), stats)
+        return synced, stats
+
+    sync_in_specs = (stacked_specs if shard_local_sync
+                     else jax.tree.map(lambda s: _spec_with(worker_prefix, P()),
+                                       grad_specs,
+                                       is_leaf=lambda t: isinstance(t, P)))
+    sync_out_specs = (grad_specs if shard_local_sync
+                      else jax.tree.map(lambda s: P(), grad_specs,
+                                        is_leaf=lambda t: isinstance(t, P)))
+    sync_sharded = jax.shard_map(
+        sync_fn, mesh=mesh, in_specs=(sync_in_specs, P()),
+        out_specs=(sync_out_specs, P()),
+        axis_names=sync_axes, check_vma=False)
+
+    def train_step(params, opt_state, batch, key):
+        loss, grads_stacked = grad_sharded(params, batch)
+        grads, stats = sync_sharded(grads_stacked, key)
+        var_scale = jnp.maximum(stats.var_ratio, 1.0) if var_adaptive_lr else 1.0
+        new_params, new_opt = opt.update(grads, opt_state, params,
+                                         var_scale=var_scale)
+        metrics = {"loss": loss, "bits": stats.bits, "density": stats.density,
+                   "var_ratio": stats.var_ratio, "wire_bytes": stats.wire_bytes,
+                   "overflow": stats.overflow, "dense_bits": stats.dense_bits}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_fsdp_train_step(cfg: transformer.ModelConfig,
+                         comp: CompressionConfig | None,
+                         opt: Optimizer,
+                         mesh,
+                         rules: dict) -> Callable:
+    """GSPMD baseline; optional Q() on the averaged gradient (Alg. 1 step 7)."""
+    loss_fn = make_loss_fn(cfg)
+    param_tree = jax.eval_shape(lambda k: transformer.init_model(k, cfg),
+                                jax.random.key(0))
+    _, param_axes = split_params(param_tree)
+    stacked = jax.tree.map(
+        lambda ax: len(ax) > 0 and ax[0] == "layers", param_axes,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t))
+
+    def train_step(params, opt_state, batch, key):
+        with shd.activation_sharding(rules, mesh):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        metrics = {"loss": loss}
+        if comp is not None and comp.name != "none":
+            q_tree, _, stats = compress_tree(comp, key, grads, stacked=stacked)
+            grads = q_tree
+            metrics.update(bits=stats.bits, density=stats.density,
+                           var_ratio=stats.var_ratio)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps (no compression: gradient sparsification is a training method)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: transformer.ModelConfig, mesh=None, rules=None):
+    def prefill_step(params, batch, caches):
+        ctx = (shd.activation_sharding(rules, mesh)
+               if rules is not None else _null_ctx())
+        with ctx:
+            return transformer.forward_prefill(params, cfg, batch, caches)
+    return prefill_step
+
+
+def make_decode_step(cfg: transformer.ModelConfig, mesh=None, rules=None):
+    def decode_step(params, caches, tokens, pos):
+        ctx = (shd.activation_sharding(rules, mesh)
+               if rules is not None else _null_ctx())
+        with ctx:
+            return transformer.forward_decode(params, cfg, tokens, caches, pos)
+    return decode_step
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

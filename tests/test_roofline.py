@@ -1,0 +1,54 @@
+"""Roofline analysis unit tests: HLO collective parsing + term math."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline import analysis
+
+
+SAMPLE_HLO = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={...}
+  %ar.1 = f32[512]{0} all-reduce(%y), to_apply=%add
+  %rs = f32[32,8]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a.0 = bf16[64,64]{1,0} all-to-all(%w), dimensions={0}
+  %cp = u8[128]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %ag2-start = bf16[8,8]{1,0} all-gather-start(%q)
+  %ag2-done = bf16[8,8]{1,0} all-gather-done(%ag2-start)
+  %not_a_collective = f32[4]{0} add(%a, %b)
+"""
+
+
+def test_collective_parsing_counts_and_bytes():
+    st = analysis.collective_stats(SAMPLE_HLO)
+    assert st.count_by_kind["all-gather"] == 2      # ag + ag2-start, not -done
+    assert st.count_by_kind["all-reduce"] == 1
+    assert st.count_by_kind["reduce-scatter"] == 1
+    assert st.count_by_kind["all-to-all"] == 1
+    assert st.count_by_kind["collective-permute"] == 1
+    assert st.bytes_by_kind["all-gather"] == 16 * 1024 * 2 + 8 * 8 * 2
+    assert st.bytes_by_kind["all-reduce"] == 512 * 4
+    assert st.bytes_by_kind["collective-permute"] == 128
+
+
+def test_tuple_shaped_collective():
+    hlo = ("%art = (f32[4,4]{1,0}, bf16[2,2]{1,0}) all-reduce(%a, %b), "
+           "to_apply=%add")
+    st = analysis.collective_stats(hlo)
+    assert st.bytes_by_kind["all-reduce"] == 4 * 4 * 4 + 2 * 2 * 2
+
+
+def test_roofline_terms_from_real_compile():
+    """End-to-end: compile a matmul, check term arithmetic."""
+    a = jax.ShapeDtypeStruct((256, 256), jnp.bfloat16)
+    compiled = jax.jit(lambda x, y: x @ y).lower(a, a).compile()
+    roof = analysis.analyze(compiled)
+    assert roof.flops > 2 * 256 ** 3 * 0.9
+    assert roof.compute_s == pytest.approx(roof.flops / analysis.PEAK_FLOPS)
+    assert roof.dominant in ("compute", "memory", "collective")
+    assert roof.collective_bytes == 0.0
+
+
+def test_model_flops_convention():
+    assert analysis.model_flops(1e9, 1e6, "train") == 6e15
+    assert analysis.model_flops(1e9, 1e6, "prefill") == 2e15
+    assert analysis.model_flops(1e9, 1e6, "decode") == 2e15

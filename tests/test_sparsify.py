@@ -1,0 +1,226 @@
+"""Unit + property tests for the paper's core sparsification algorithms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coding, sparsify
+from repro.core.compressors import REGISTRY, make_compressor
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_grad(seed, d=512, skew=2.0):
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal(d) * np.exp(skew * rng.standard_normal(d))
+    return jnp.asarray(g, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 (closed form)
+# ---------------------------------------------------------------------------
+
+class TestClosedForm:
+    @pytest.mark.parametrize("eps", [0.1, 0.5, 1.0, 4.0])
+    def test_variance_budget_is_tight_or_met(self, eps):
+        g = _rand_grad(0)
+        p = sparsify.closed_form_probabilities(g, eps)
+        # variance constraint: sum g^2/p <= (1+eps) sum g^2  (within fp tolerance)
+        var = float(jnp.sum(jnp.where(p > 0, g**2 / jnp.where(p > 0, p, 1), 0.0)))
+        budget = (1 + eps) * float(jnp.sum(g**2))
+        assert var <= budget * (1 + 1e-4)
+
+    def test_structure_matches_proposition1(self):
+        """p_i = min(lambda |g_i|, 1): top magnitudes saturate at 1, the tail is
+        proportional to |g_i| with a single shared lambda."""
+        g = _rand_grad(1)
+        p = np.asarray(sparsify.closed_form_probabilities(g, 1.0))
+        a = np.abs(np.asarray(g))
+        tail = p < 1.0
+        lam = p[tail] / a[tail]
+        assert np.allclose(lam, lam.mean(), rtol=1e-4)
+        # saturated set = largest magnitudes
+        if tail.any() and (~tail).any():
+            assert a[~tail].min() >= a[tail].max() - 1e-6
+
+    def test_monotone_in_eps(self):
+        """Looser variance budget -> sparser output (sum p decreases)."""
+        g = _rand_grad(2)
+        sums = [float(jnp.sum(sparsify.closed_form_probabilities(g, e)))
+                for e in (0.1, 0.5, 1.0, 2.0, 8.0)]
+        assert all(a >= b - 1e-3 for a, b in zip(sums, sums[1:]))
+
+    def test_eps_zero_keeps_everything(self):
+        g = _rand_grad(3, d=64)
+        p = sparsify.closed_form_probabilities(g, 0.0)
+        assert np.allclose(np.asarray(p)[np.asarray(g) != 0], 1.0)
+
+    def test_zero_gradient(self):
+        p = sparsify.closed_form_probabilities(jnp.zeros(32), 1.0)
+        assert float(jnp.sum(p)) == 0.0
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 10_000), eps=st.floats(0.05, 8.0),
+           d=st.integers(2, 300))
+    def test_property_budget_and_range(self, seed, eps, d):
+        g = _rand_grad(seed, d=d)
+        p = sparsify.closed_form_probabilities(g, eps)
+        pn = np.asarray(p)
+        assert ((pn >= 0) & (pn <= 1.0 + 1e-6)).all()
+        var = float(jnp.sum(jnp.where(p > 0, g**2 / jnp.where(p > 0, p, 1), 0.0)))
+        assert var <= (1 + eps) * float(jnp.sum(g**2)) * (1 + 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 (greedy)
+# ---------------------------------------------------------------------------
+
+class TestGreedy:
+    @pytest.mark.parametrize("rho", [0.01, 0.05, 0.25, 0.9])
+    def test_density_close_to_target(self, rho):
+        g = _rand_grad(4, d=4096, skew=1.0)
+        p = sparsify.greedy_probabilities(g, rho, num_iters=8)
+        density = float(jnp.mean(p))
+        assert density <= rho * 1.02 + 1e-6      # never exceeds target (+fp)
+        assert density >= rho * 0.7              # converges near target
+
+    def test_two_iterations_near_converged(self):
+        """Paper section 5: after 2 iterations further updates are negligible."""
+        g = _rand_grad(5, d=4096)
+        p2 = sparsify.greedy_probabilities(g, 0.1, num_iters=2)
+        p16 = sparsify.greedy_probabilities(g, 0.1, num_iters=16)
+        rel = float(jnp.linalg.norm(p2 - p16) / (jnp.linalg.norm(p16) + 1e-12))
+        assert rel < 0.05
+
+    def test_proportional_tail(self):
+        g = _rand_grad(6)
+        p = np.asarray(sparsify.greedy_probabilities(g, 0.1, num_iters=4))
+        a = np.abs(np.asarray(g))
+        tail = (p < 1.0) & (p > 0)
+        lam = p[tail] / a[tail]
+        assert np.allclose(lam, lam.mean(), rtol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), rho=st.floats(0.01, 1.0),
+           d=st.integers(4, 500))
+    def test_property_range_and_density(self, seed, rho, d):
+        g = _rand_grad(seed, d=d)
+        p = np.asarray(sparsify.greedy_probabilities(g, rho, num_iters=4))
+        assert ((p >= 0) & (p <= 1.0 + 1e-6)).all()
+        assert p.mean() <= min(1.0, rho) * 1.05 + 2.0 / d
+
+
+# ---------------------------------------------------------------------------
+# The sampler Q(g)
+# ---------------------------------------------------------------------------
+
+class TestSampler:
+    def test_unbiasedness_montecarlo(self):
+        g = _rand_grad(7, d=128)
+        p = sparsify.greedy_probabilities(g, 0.3)
+        keys = jax.random.split(jax.random.key(0), 4000)
+        qs = jax.vmap(lambda k: sparsify.sparsify(k, g, p))(keys)
+        mean = np.asarray(jnp.mean(qs, axis=0))
+        # theoretical per-coordinate sd of Q: |g| * sqrt((1-p)/p)
+        pn, gn = np.asarray(p), np.asarray(g)
+        sd = np.abs(gn) * np.sqrt(np.where(pn > 0, (1 - pn) / np.maximum(pn, 1e-9), 0))
+        se = sd / np.sqrt(4000)
+        err = np.abs(mean - gn)
+        assert (err <= 6 * se + 1e-5).all()
+
+    def test_variance_matches_formula(self):
+        """E||Q||^2 == sum g^2/p (Monte-Carlo check of the section 3.1 identity)."""
+        g = _rand_grad(8, d=64)
+        p = sparsify.closed_form_probabilities(g, 1.0)
+        keys = jax.random.split(jax.random.key(1), 8000)
+        qs = jax.vmap(lambda k: sparsify.sparsify(k, g, p))(keys)
+        emp = float(jnp.mean(jnp.sum(qs**2, axis=1)))
+        theo = float(jnp.sum(jnp.where(p > 0, g**2 / jnp.where(p > 0, p, 1), 0.0)))
+        assert abs(emp - theo) / theo < 0.05
+
+    def test_expected_nnz(self):
+        g = _rand_grad(9, d=256)
+        p = sparsify.greedy_probabilities(g, 0.2)
+        keys = jax.random.split(jax.random.key(2), 2000)
+        qs = jax.vmap(lambda k: sparsify.sparsify(k, g, p))(keys)
+        nnz = float(jnp.mean(jnp.sum(jnp.abs(qs) > 0, axis=1)))
+        assert abs(nnz - float(jnp.sum(p))) / float(jnp.sum(p)) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Lemma 3 / Theorem 4 (sparsity + coding theory)
+# ---------------------------------------------------------------------------
+
+def _approx_sparse_grad(seed, d, s, rho):
+    """Construct a (rho, s)-approximately sparse vector: ||g_Sc||_1 <= rho ||g_S||_1."""
+    rng = np.random.default_rng(seed)
+    g = np.zeros(d)
+    head = rng.standard_normal(s) * 10 + 20
+    g[:s] = head * rng.choice([-1, 1], s)
+    head_l1 = np.abs(g[:s]).sum()
+    tail = np.abs(rng.standard_normal(d - s))
+    tail *= (0.9 * rho) * head_l1 / tail.sum()
+    g[s:] = tail * rng.choice([-1, 1], d - s)
+    return jnp.asarray(rng.permutation(g), jnp.float32)
+
+
+class TestTheory:
+    @pytest.mark.parametrize("rho,s", [(0.25, 16), (0.5, 32), (1.0, 8)])
+    def test_lemma3_expected_sparsity(self, rho, s):
+        d = 1024
+        g = _approx_sparse_grad(0, d, s, rho)
+        p = sparsify.closed_form_probabilities(g, rho)   # eps = rho per Lemma 3
+        assert float(jnp.sum(p)) <= (1 + rho) * s * 1.05
+
+    @pytest.mark.parametrize("rho,s", [(0.25, 16), (0.5, 32)])
+    def test_theorem4_coding_length(self, rho, s):
+        d, b = 1024, 32
+        g = _approx_sparse_grad(1, d, s, rho)
+        p = sparsify.closed_form_probabilities(g, rho)
+        bits = float(coding.expected_coding_bits(p, b))
+        assert bits <= coding.theorem4_bound_bits(s, rho, d, b) * 1.05
+        assert bits < coding.dense_coding_bits(d, b)     # beats dense
+
+
+# ---------------------------------------------------------------------------
+# Compressor zoo
+# ---------------------------------------------------------------------------
+
+class TestCompressors:
+    @pytest.mark.parametrize("name", ["gspar", "unisp", "qsgd", "terngrad", "none"])
+    def test_unbiased_montecarlo(self, name):
+        g = _rand_grad(11, d=96)
+        fn = make_compressor(name)
+        keys = jax.random.split(jax.random.key(3), 3000)
+        cg0 = fn(keys[0], g)
+        qs = jax.vmap(lambda k: fn(k, g).q)(keys)
+        mean = np.asarray(jnp.mean(qs, axis=0))
+        # se: empirical, floored by the mask-scheme theoretical sd |g|sqrt((1-p)/p)
+        # (empirical sd is 0 for coordinates that were never sampled)
+        pn, gn = np.asarray(cg0.p), np.asarray(g)
+        sd_theo = np.abs(gn) * np.sqrt(np.where(pn > 0, (1 - pn) / np.maximum(pn, 1e-9), 0))
+        sd = np.maximum(np.asarray(jnp.std(qs, axis=0)), sd_theo)
+        se = sd / np.sqrt(3000) + 1e-6
+        assert (np.abs(mean - gn) <= 6 * se + 1e-4 + 1e-5 * np.abs(gn)).all()
+
+    def test_topk_keeps_largest(self):
+        g = _rand_grad(12, d=128)
+        cg = make_compressor("topk", rho=0.1)(jax.random.key(0), g)
+        nz = np.flatnonzero(np.asarray(cg.q))
+        order = np.argsort(-np.abs(np.asarray(g)))
+        assert set(nz) == set(order[: len(nz)])
+
+    def test_gspar_lower_variance_than_unisp_at_equal_density(self):
+        """The paper's central claim: optimal p minimizes variance at fixed sparsity."""
+        g = _rand_grad(13, d=2048, skew=2.0)
+        rho = 0.05
+        p_opt = sparsify.greedy_probabilities(g, rho, num_iters=8)
+        rho_eff = float(jnp.mean(p_opt))          # match UniSp to realized density
+        p_uni = sparsify.uniform_probabilities(g, rho_eff)
+        v_opt = float(sparsify.variance_inflation(g, p_opt))
+        v_uni = float(sparsify.variance_inflation(g, p_uni))
+        assert v_opt < v_uni
+
+    def test_registry_complete(self):
+        assert {"gspar", "unisp", "topk", "qsgd", "terngrad", "none"} <= set(REGISTRY)

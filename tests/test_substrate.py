@@ -1,0 +1,182 @@
+"""Substrate tests: optimizers, checkpointing, data generators, sharding
+rules, and the single-device train-step path."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.core.api import CompressionConfig, compress_tree
+from repro.data import synthetic
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_mesh
+from repro.models import transformer as tf
+from repro.models.common import split_params
+from repro.optim.optimizers import SVRG, adam, sgd
+from repro.train import step as step_lib
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def _quadratic(w):
+    return jnp.sum((w - 3.0) ** 2)
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("make", [
+        lambda: sgd(0.1), lambda: sgd(0.05, momentum=0.9), lambda: adam(0.3)])
+    def test_converges_on_quadratic(self, make):
+        opt = make()
+        w = {"w": jnp.zeros(8)}
+        state = opt.init(w)
+        for _ in range(120):
+            g = jax.grad(lambda p: _quadratic(p["w"]))(w)
+            w, state = opt.update(g, state, w)
+        np.testing.assert_allclose(np.asarray(w["w"]), 3.0, atol=1e-2)
+
+    def test_adam_bf16_moments(self):
+        opt = adam(0.3, moment_dtype=jnp.bfloat16)
+        w = {"w": jnp.zeros(8)}
+        state = opt.init(w)
+        assert state["m"]["w"].dtype == jnp.bfloat16
+        for _ in range(150):
+            g = jax.grad(lambda p: _quadratic(p["w"]))(w)
+            w, state = opt.update(g, state, w)
+        np.testing.assert_allclose(np.asarray(w["w"]), 3.0, atol=5e-2)
+
+    def test_var_scale_shrinks_step(self):
+        opt = sgd(0.1)
+        w = {"w": jnp.zeros(4)}
+        s = opt.init(w)
+        g = {"w": jnp.ones(4)}
+        w1, _ = opt.update(g, s, w, var_scale=1.0)
+        w2, _ = opt.update(g, s, w, var_scale=4.0)
+        assert float(jnp.abs(w2["w"]).max()) < float(jnp.abs(w1["w"]).max())
+
+    def test_svrg_control_variate(self):
+        svrg = SVRG(sgd(0.05))
+        w = {"w": jnp.zeros(4)}
+        state = svrg.init(w)
+        full = jax.grad(lambda p: _quadratic(p["w"]))(w)
+        state = svrg.set_reference(state, w, full)
+        for _ in range(100):
+            g_w = jax.grad(lambda p: _quadratic(p["w"]))(w)
+            g_r = jax.grad(lambda p: _quadratic(p["w"]))(state["ref_params"])
+            vr = jax.tree.map(lambda a, b, c: a - b + c, g_w, g_r,
+                              state["ref_grad"])
+            w, state = svrg.update(vr, state, w)
+        np.testing.assert_allclose(np.asarray(w["w"]), 3.0, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {"a": {"b": jnp.arange(6.0).reshape(2, 3)},
+            "c": [jnp.ones(4, jnp.int32), jnp.zeros((), jnp.float32)]}
+    path = os.path.join(tempfile.mkdtemp(), "ck.npz")
+    checkpoint.save(path, tree, extra={"step": 7})
+    back = checkpoint.restore(path, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert checkpoint.load_meta(path)["step"] == 7
+
+
+# ---------------------------------------------------------------------------
+# Data generators (paper section 5 recipes)
+# ---------------------------------------------------------------------------
+
+class TestData:
+    def test_logreg_shapes_and_balance(self):
+        x, y, w = synthetic.logreg_data(0, n=256, d=64)
+        assert x.shape == (256, 64) and y.shape == (256,)
+        assert set(np.unique(np.asarray(y))) <= {-1.0, 1.0}
+        assert 0.2 < float(jnp.mean(y > 0)) < 0.8
+
+    def test_magnitude_sparsification_effect(self):
+        """Larger C2 (more damped coords) => smaller feature mass."""
+        x_dense, _, _ = synthetic.logreg_data(0, n=256, d=512, c1=0.1, c2=0.05)
+        x_sparse, _, _ = synthetic.logreg_data(0, n=256, d=512, c1=0.1, c2=0.9)
+        assert (float(jnp.mean(jnp.abs(x_sparse)))
+                < float(jnp.mean(jnp.abs(x_dense))))
+
+    def test_token_batch_learnable(self):
+        b = synthetic.token_batch(jax.random.key(0), 128, 4, 64)
+        assert b["tokens"].shape == (4, 64)
+        assert int(b["tokens"].max()) < 128
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+class TestSharding:
+    def _mesh(self):
+        return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+
+    def test_resolve_spec_drops_nondivisible(self):
+        spec = shd.resolve_spec((7, 16), ("vocab", "mlp"), shd.DP_RULES,
+                                self._mesh())
+        assert spec == jax.sharding.PartitionSpec(None, "model")
+
+    def test_resolve_spec_multiaxis(self):
+        rules = {"embed": ("data",), "mlp": "model"}
+        spec = shd.resolve_spec((8, 8), ("embed", "mlp"), rules, self._mesh())
+        assert spec == jax.sharding.PartitionSpec("data", "model")
+
+    def test_with_pod_extends_batch(self):
+        rules = shd.with_pod(dict(shd.FSDP_RULES))
+        assert rules["batch"] == ("pod", "data")
+        assert rules["experts"] == ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# Train step (single device; multi-device variants in test_distributed.py)
+# ---------------------------------------------------------------------------
+
+def test_compressed_step_single_device_trains():
+    cfg = tf.ModelConfig(name="t", vocab=64, d_model=32,
+                         pattern=("attn_full",), num_periods=1, num_heads=2,
+                         num_kv_heads=2, head_dim=16, d_ff=64,
+                         remat="none", dtype=jnp.float32)
+    params, _ = split_params(tf.init_model(jax.random.key(0), cfg))
+    opt = sgd(0.1)
+    state = opt.init(params)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    comp = CompressionConfig(name="gspar", rho=0.3, wire="gather",
+                             min_leaf_size=8)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (4, 16), 0, 64)}
+    with jax.set_mesh(mesh):
+        ts = jax.jit(step_lib.make_compressed_train_step(
+            cfg, comp, opt, mesh, dict(shd.DP_RULES)))
+        losses = []
+        for i in range(15):
+            params, state, m = ts(params, state, batch, jax.random.key(i))
+            losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_error_feedback_reduces_topk_bias():
+    """Top-k is biased; with error feedback the accumulated update converges
+    to the true gradient direction (beyond-paper feature)."""
+    g_true = jnp.asarray(np.random.default_rng(0).standard_normal(256),
+                         jnp.float32)
+    cfg_ef = CompressionConfig(name="topk", rho=0.1, error_feedback=True,
+                               min_leaf_size=8)
+    residual = {"g": jnp.zeros_like(g_true)}
+    acc = jnp.zeros_like(g_true)
+    for i in range(30):
+        q, residual, _ = compress_tree(cfg_ef, jax.random.key(i),
+                                       {"g": g_true}, residual)
+        acc = acc + q["g"]
+    direction = acc / 30.0
+    # with EF the long-run average approaches g_true; without it, small
+    # coordinates would never be transmitted
+    err_ef = float(jnp.linalg.norm(direction - g_true) / jnp.linalg.norm(g_true))
+    assert err_ef < 0.15
