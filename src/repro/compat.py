@@ -1,0 +1,129 @@
+"""Compatibility shims for older jax releases (this container ships 0.4.37).
+
+The codebase targets the post-0.5 public API (``jax.set_mesh``,
+``jax.shard_map`` with ``axis_names``/``check_vma``, ``jax.make_mesh`` with
+``axis_types``, ``jax.sharding.AxisType``/``get_abstract_mesh``,
+``jax.lax.axis_size``). On older jax these names are missing but equivalent
+functionality exists under the legacy spellings, so we install thin adapters
+onto the jax namespace at import time. Every shim is a no-op when the modern
+name already exists, so this module is safe (and idle) on current jax.
+
+Imported for its side effects from ``repro/__init__.py``.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):           # mirror of jax.sharding.AxisType
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    import inspect
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return
+    _orig = jax.make_mesh
+
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types                   # legacy meshes are implicitly Auto
+        return _orig(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_set_mesh() -> None:
+    if hasattr(jax, "set_mesh"):
+        return
+
+    def set_mesh(mesh):
+        # legacy Mesh is itself the context manager that makes it ambient
+        return mesh
+
+    jax.set_mesh = set_mesh
+
+
+def _ambient_mesh():
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    return mesh
+
+
+def _install_get_abstract_mesh() -> None:
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return
+    jax.sharding.get_abstract_mesh = _ambient_mesh
+
+
+def _install_abstract_mesh() -> None:
+    import inspect
+    try:
+        params = inspect.signature(jax.sharding.AbstractMesh.__init__).parameters
+    except (TypeError, ValueError):
+        return
+    if "shape_tuple" not in params:
+        return                            # modern (axis_sizes, axis_names) API
+    _orig = jax.sharding.AbstractMesh
+
+    def AbstractMesh(axis_shapes, axis_names=None, *, axis_types=None):
+        if axis_names is None:            # legacy shape_tuple call-through
+            return _orig(axis_shapes)
+        return _orig(tuple(zip(axis_names, axis_shapes)))
+
+    jax.sharding.AbstractMesh = AbstractMesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+                  check_vma=True):
+        # Partial-manual regions (auto= on legacy shard_map) abort this
+        # jaxlib's SPMD partitioner whenever the body contains a lax.scan
+        # (hlo_sharding_util IsManualSubgroup check failure). Since in/out
+        # specs never name auto axes, binding every axis manually instead is
+        # semantically identical — unmentioned axes mean "replicated" either
+        # way; only intra-region GSPMD sharding over the auto axes is lost,
+        # which is a performance property, not a correctness one.
+        del axis_names
+        m = mesh if mesh is not None else _ambient_mesh()
+        return _legacy(f, m, in_specs=in_specs, out_specs=out_specs,
+                       check_rep=False, auto=frozenset())
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_size() -> None:
+    if hasattr(jax.lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        # psum of the literal 1 is constant-folded to the axis size
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = axis_size
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_set_mesh()
+    _install_abstract_mesh()
+    _install_get_abstract_mesh()
+    _install_shard_map()
+    _install_axis_size()
+
+
+install()

@@ -1,0 +1,4 @@
+"""Distribution substrate: logical-axis sharding rules and helpers."""
+from repro.dist import sharding
+
+__all__ = ["sharding"]
