@@ -38,6 +38,23 @@ def run(quick: bool = False):
                          f"contention_reduction="
                          f"{st_d['conflicted_mc'] / max(st['conflicted_mc'], 1e-9):.0f}x"))
 
+    # backend cross-check on the same gradient: the fused pallas path
+    # (interpret mode on CPU) must reproduce the reference solver's conflict
+    # profile, since both realize the same p = min(lambda |g|, 1).
+    import jax
+    from repro.kernels.sparsify import ops as kops
+    p_ref = sparsify.greedy_probabilities(g, 0.05, num_iters=4)
+    lam = kops.gspar_lambda(g, rho=0.05, num_iters=4, interpret=True)
+    p_pal = jnp.where(jnp.abs(g) > 0,
+                      jnp.minimum(lam * jnp.abs(g), 1.0), 0.0)
+    st_ref = conflict_stats(p_ref, 32)
+    st_pal = conflict_stats(p_pal, 32)
+    payload["backend_parity"] = {"reference": st_ref, "pallas": st_pal}
+    rows.append(("fig9:backend_parity", 0.0,
+                 f"conflicted_ref={st_ref['conflicted_mc']:.2f};"
+                 f"conflicted_pallas={st_pal['conflicted_mc']:.2f};"
+                 f"p_maxdiff={float(jnp.max(jnp.abs(p_ref - p_pal))):.2e}"))
+
     # Algorithm 4 simulation: time-to-loss under atomic-retry penalty
     steps = 120 if quick else 400
     for workers in (16, 32):

@@ -1,5 +1,14 @@
 """Distributed gradient-exchange layer: sparse All-Reduce on TPU meshes."""
 from repro.comm.compaction import capacity_for, compact, scatter
-from repro.comm.sync import SyncStats, sync_tree
 
 __all__ = ["capacity_for", "compact", "scatter", "SyncStats", "sync_tree"]
+
+
+def __getattr__(name):
+    # repro.comm.sync consumes repro.core.sparse, which itself needs
+    # repro.comm.compaction; loading sync lazily keeps the package importable
+    # from either end of that chain.
+    if name in ("SyncStats", "sync_tree", "sync"):
+        from repro.comm import sync as _sync
+        return _sync if name == "sync" else getattr(_sync, name)
+    raise AttributeError(f"module 'repro.comm' has no attribute {name!r}")

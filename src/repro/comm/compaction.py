@@ -23,19 +23,24 @@ def capacity_for(d: int, rho: float, slack: float = 1.25) -> int:
 
 
 def compact(q: jax.Array, k_cap: int) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Pack the nonzeros of q into (values[k_cap], idx[k_cap], overflow_count).
+    """Pack the nonzeros of q into (values[k_cap], idx[k_cap], nnz).
 
-    idx entries for unused slots point at slot of a zero value, so scatter-add
-    of (values, idx) reconstructs q exactly (modulo overflow drops).
+    ``nnz`` is the nonzero count of q *before* the capacity cut — the single
+    authoritative count callers derive overflow from
+    (``max(nnz - k_cap, 0)``). idx entries for unused slots point at slot of
+    a zero value, so scatter-add of (values, idx) reconstructs q exactly
+    (modulo overflow drops).
     """
     flat = q.reshape(-1)
     mag = jnp.abs(flat.astype(jnp.float32))
     vals_mag, idx = jax.lax.top_k(mag, k_cap)
-    vals = flat[idx]
-    vals = jnp.where(vals_mag > 0, vals, 0.0)           # mask padding slots
+    # mask padding slots; the zero literal must carry the input dtype, or
+    # bf16/f16 values get silently promoted and the packed-wire byte
+    # accounting (dtype.itemsize) reports f32 traffic.
+    vals = jnp.where(vals_mag > 0, flat[idx], jnp.zeros((), flat.dtype))
+    vals = vals.astype(flat.dtype)
     nnz = jnp.sum((mag > 0).astype(jnp.int32))
-    overflow = jnp.maximum(nnz - k_cap, 0)
-    return vals, idx.astype(jnp.int32), overflow
+    return vals, idx.astype(jnp.int32), nnz
 
 
 def scatter(vals: jax.Array, idx: jax.Array, d: int) -> jax.Array:

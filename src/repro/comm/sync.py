@@ -8,16 +8,26 @@ Wire formats (CompressionConfig.wire):
   dense  -- Q(g) stays in dense layout; psum over the data axis. Models the
             algorithm exactly; communication savings are *accounted* (bits)
             but the HLO collective is still dense. Reference semantics.
-  gather -- fixed-capacity (values, idx) compaction + all_gather + local
+  gather -- the backend (repro.core.sparse) emits fixed-capacity
+            (values, idx) buffers directly; one all_gather + local
             scatter-add. The HLO collective shrinks to 2*k_cap*M words: this
             is the TPU-native realization of the paper's sparse All-Reduce.
   packed -- like gather, but values travel as bf16 (and the Q_B tail of the
             paper's coding would be sign+lambda; bf16 is the conservative
-            stand-in that keeps one buffer). Halves collective bytes again.
+            stand-in that keeps one buffer). A backend-independent wire
+            transform applied at bucketing time. Halves collective bytes.
+
+The sparse wires are *bucketed*: every leaf's buffers are offset into one
+concatenated coordinate space and exchanged with a single all_gather pair
+per wire dtype, so a tree of hundreds of small leaves costs O(1) collectives
+instead of O(n_leaves). Tiny (dense-passthrough) leaves share one psum the
+same way. Compression happens exactly once per leaf, in the backend — this
+layer never re-discovers nonzeros from a dense array.
 
 Multi-pod: with ``resparsify_pods`` the intra-pod average is re-sparsified
 before the inter-pod exchange — exactly the optional step 7 of Algorithm 1,
-mapped onto the pod axis of the mesh.
+mapped onto the pod axis of the mesh. Wire bytes are reported per stage
+(intra-pod vs inter-pod) as well as in total.
 """
 from __future__ import annotations
 
@@ -28,7 +38,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import compaction
-from repro.core.api import CompressionConfig, compress_tree
+from repro.core.api import (CompressionConfig, compress_tree,
+                            compress_tree_sparse)
+from repro.core.sparse import SparseGrad
 
 Axis = str | tuple[str, ...]
 
@@ -37,12 +49,14 @@ Axis = str | tuple[str, ...]
 @dataclasses.dataclass
 class SyncStats:
     """Per-step accounting for one worker's gradient synchronization."""
-    bits: jax.Array          # message bits this worker sent (coding model)
-    dense_bits: jax.Array    # uncompressed message bits
-    wire_bytes: jax.Array    # bytes actually moved by the HLO collective
-    density: jax.Array       # realized nnz fraction
-    var_ratio: jax.Array     # ||Q(g)||^2/||g||^2, the paper's `var`
-    overflow: jax.Array      # coords dropped by fixed-capacity compaction
+    bits: jax.Array              # message bits this worker sent (coding model)
+    dense_bits: jax.Array        # uncompressed message bits
+    wire_bytes: jax.Array        # bytes actually moved by the HLO collectives
+    wire_bytes_intra: jax.Array  # ... in the intra-pod (data-axis) stage
+    wire_bytes_inter: jax.Array  # ... in the inter-pod stage (0 if single pod)
+    density: jax.Array           # realized nnz fraction
+    var_ratio: jax.Array         # ||Q(g)||^2/||g||^2, the paper's `var`
+    overflow: jax.Array          # coords dropped by fixed-capacity compaction
 
 
 def _axis_size(axis: Axis) -> jax.Array:
@@ -63,61 +77,119 @@ def _worker_key(key: jax.Array, axes: tuple[str, ...]) -> jax.Array:
 def _sync_leaves_dense(q_tree: Any, axis: Axis):
     synced = jax.tree.map(lambda q: jax.lax.pmean(q, axis), q_tree)
     wire = sum(float(q.size * q.dtype.itemsize) for q in jax.tree.leaves(q_tree))
-    return synced, jnp.asarray(wire, jnp.float32)
+    return synced, wire
 
 
-def _sync_leaves_gather(q_tree: Any, axis: Axis, cfg: CompressionConfig,
-                        stacked: Any | None = None):
-    """all_gather of compact buffers + local scatter-add (the sparse AR).
-
-    Stacked (scan-over-layers) leaves are compacted per layer, mirroring the
-    per-layer compression."""
-    m = _axis_size(axis)
-    wire = jnp.asarray(0.0, jnp.float32)
-    overflow = jnp.asarray(0, jnp.int32)
-    out = []
-    leaves, treedef = jax.tree_util.tree_flatten(q_tree)
-    stk_leaves = (jax.tree_util.tree_flatten(stacked)[0]
-                  if stacked is not None else [False] * len(leaves))
-    for q, stk in zip(leaves, stk_leaves):
-        d = q.size
-        if d < cfg.min_leaf_size:          # tiny leaf: dense psum
-            out.append(jax.lax.pmean(q.astype(jnp.float32), axis)
-                       .astype(q.dtype))
-            wire = wire + float(q.size * q.dtype.itemsize)
+def _compact_items(cfg: CompressionConfig, leaves: list, stk_leaves: list):
+    """Fixed-capacity compaction of an already-dense (e.g. pod-averaged)
+    tree: the single nonzero-selection of the inter-pod stage."""
+    items = []
+    for leaf, stk in zip(leaves, stk_leaves):
+        if leaf.size < cfg.min_leaf_size:
+            items.append(("dense", leaf))
             continue
-        if stk and q.ndim >= 2 and q.shape[0] > 1:
-            layers = q.shape[0]
-            d_l = d // layers
+        zero = jnp.zeros((), jnp.float32)
+        if stk and leaf.ndim >= 2 and leaf.shape[0] > 1:
+            layers = leaf.shape[0]
+            d_l = leaf.size // layers
             k_cap = compaction.capacity_for(d_l, cfg.rho, cfg.capacity_slack)
-            q2 = q.reshape(layers, d_l)
-            vals, idx, ovf = jax.vmap(
-                lambda row: compaction.compact(row, k_cap))(q2)   # [L, k]
-            ovf = jnp.sum(ovf)
-            if cfg.wire == "packed":
-                vals = vals.astype(jnp.bfloat16)
-            gvals = jax.lax.all_gather(vals, axis, tiled=False)   # [m, L, k]
-            gidx = jax.lax.all_gather(idx, axis, tiled=False)
-            dense = jax.vmap(
-                lambda v, i: compaction.scatter(
-                    v.astype(jnp.float32).reshape(-1), i.reshape(-1), d_l),
-                in_axes=(1, 1))(gvals, gidx)                      # [L, d_l]
-            out.append((dense / m).reshape(q.shape).astype(q.dtype))
-            wire = wire + float(layers * k_cap) * (vals.dtype.itemsize + 4)
-            overflow = overflow + ovf
+            vals, idx, nnz = jax.vmap(
+                lambda row: compaction.compact(row, k_cap))(
+                    leaf.reshape(layers, d_l))
+            items.append(("sparse", SparseGrad(
+                values=vals, idx=idx, nnz=nnz,
+                p_sum=nnz.astype(jnp.float32),   # deterministic: E[nnz]=nnz
+                bits=jnp.zeros((layers,), jnp.float32),
+                var_ratio=jnp.zeros((layers,), jnp.float32),
+                d=d_l, shape=(d_l,))))
             continue
-        k_cap = compaction.capacity_for(d, cfg.rho, cfg.capacity_slack)
-        vals, idx, ovf = compaction.compact(q, k_cap)
-        if cfg.wire == "packed":
-            vals = vals.astype(jnp.bfloat16)
-        gvals = jax.lax.all_gather(vals, axis, tiled=False)   # [m, k_cap]
-        gidx = jax.lax.all_gather(idx, axis, tiled=False)
-        dense = compaction.scatter(gvals.astype(jnp.float32).reshape(-1),
-                                   gidx.reshape(-1), d)
-        out.append((dense / m).reshape(q.shape).astype(q.dtype))
-        wire = wire + float(k_cap) * (vals.dtype.itemsize + 4)
-        overflow = overflow + ovf
-    return jax.tree_util.tree_unflatten(treedef, out), wire, overflow
+        k_cap = compaction.capacity_for(leaf.size, cfg.rho,
+                                        cfg.capacity_slack)
+        vals, idx, nnz = compaction.compact(leaf, k_cap)
+        items.append(("sparse", SparseGrad(
+            values=vals, idx=idx, nnz=nnz, p_sum=nnz.astype(jnp.float32),
+            bits=zero, var_ratio=zero, d=leaf.size,
+            shape=tuple(leaf.shape))))
+    return items
+
+
+def _bucketed_sync(items: list, leaves: list, axis: Axis,
+                   cfg: CompressionConfig):
+    """Exchange all leaves with one collective per (kind, wire-dtype) group.
+
+    Sparse leaves are offset into a single concatenated coordinate space:
+    one all_gather for values, one for indices, one scatter-add back into a
+    flat buffer covering the whole tree. Dense-passthrough leaves share one
+    psum. Indices are int32 — a single bucket therefore addresses up to 2^31
+    coordinates (~8.6 GB of f32 gradient per dtype group); beyond that the
+    bucket would need chunking.
+    """
+    m = _axis_size(axis)
+    out: list = [None] * len(items)
+    wire = 0.0
+    overflow = jnp.asarray(0, jnp.int32)
+
+    dense_ids: list = []
+    sparse_groups: dict = {}
+    for i, (kind, payload) in enumerate(items):
+        if kind == "dense":
+            dense_ids.append(i)
+        else:
+            wdt = (jnp.dtype(jnp.bfloat16) if cfg.wire == "packed"
+                   else jnp.dtype(payload.values.dtype))
+            sparse_groups.setdefault(wdt, []).append(i)
+
+    if dense_ids:
+        # one f32 psum for all tiny leaves: f32 keeps the mean exact for
+        # low-precision leaves, and the accounting charges what the HLO
+        # collective actually moves (4 bytes/element).
+        flat = jnp.concatenate(
+            [items[i][1].reshape(-1).astype(jnp.float32) for i in dense_ids])
+        synced = jax.lax.pmean(flat, axis)
+        off = 0
+        for i in dense_ids:
+            leaf = leaves[i]
+            out[i] = (synced[off:off + leaf.size].reshape(leaf.shape)
+                      .astype(leaf.dtype))
+            off += leaf.size
+        wire += float(flat.size * 4)
+
+    for wdt, ids in sorted(sparse_groups.items(), key=lambda kv: str(kv[0])):
+        vals_parts, idx_parts = [], []
+        offset = 0
+        for i in ids:
+            sg = items[i][1]
+            if sg.values.ndim == 2:          # stacked: [L, k] per-layer buffers
+                layers = sg.values.shape[0]
+                gidx = sg.idx + (jnp.arange(layers, dtype=jnp.int32)
+                                 * sg.d)[:, None]
+                block = layers * sg.d
+            else:
+                gidx = sg.idx
+                block = sg.d
+            idx_parts.append((gidx + jnp.int32(offset)).reshape(-1))
+            vals_parts.append(sg.values.reshape(-1).astype(wdt))
+            offset += block
+            overflow = overflow + jnp.sum(sg.overflow())
+        vals_flat = jnp.concatenate(vals_parts)
+        idx_flat = jnp.concatenate(idx_parts)
+        gvals = jax.lax.all_gather(vals_flat, axis, tiled=False)  # [m, K]
+        gidx = jax.lax.all_gather(idx_flat, axis, tiled=False)
+        dense = jnp.zeros((offset,), jnp.float32)
+        dense = dense.at[gidx.reshape(-1)].add(
+            gvals.astype(jnp.float32).reshape(-1), mode="drop") / m
+        off = 0
+        for i in ids:
+            sg = items[i][1]
+            leaf = leaves[i]
+            block = (sg.values.shape[0] * sg.d if sg.values.ndim == 2
+                     else sg.d)
+            out[i] = (dense[off:off + block].reshape(leaf.shape)
+                      .astype(leaf.dtype))
+            off += block
+        wire += float(vals_flat.size) * (wdt.itemsize + 4)
+
+    return out, wire, overflow
 
 
 def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
@@ -138,36 +210,56 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
     if fold_worker_key:
         key = _worker_key(key, axes)
 
-    q_tree, _, stats = compress_tree(cfg, key, grads, stacked=stacked)
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    stk_leaves = (jax.tree_util.tree_flatten(stacked)[0]
+                  if stacked is not None else [False] * len(leaves))
     overflow = jnp.asarray(0, jnp.int32)
 
+    wire_inter = 0.0
     if cfg.wire == "dense":
+        q_tree, _, stats = compress_tree(cfg, key, grads, stacked=stacked)
+        synced, wire_intra = _sync_leaves_dense(q_tree, data_axis)
         if pod_axis is not None and not cfg.resparsify_pods:
-            synced, wire = _sync_leaves_dense(q_tree, (data_axis, pod_axis))
-        else:
-            synced, wire = _sync_leaves_dense(q_tree, data_axis)
+            # hierarchical mean (equal pod sizes), so the per-stage byte
+            # split stays honest: intra = data-axis stage, inter = pod stage
+            synced, wire_inter = _sync_leaves_dense(synced, pod_axis)
     elif cfg.wire in ("gather", "packed"):
-        synced, wire, overflow = _sync_leaves_gather(q_tree, data_axis, cfg,
-                                                     stacked)
+        items, _, stats = compress_tree_sparse(cfg, key, grads,
+                                               stacked=stacked)
+        out_leaves, wire_intra, overflow = _bucketed_sync(items, leaves,
+                                                          data_axis, cfg)
+        synced = jax.tree_util.tree_unflatten(treedef, out_leaves)
     else:
         raise ValueError(f"unknown wire format {cfg.wire!r}")
 
     # Algorithm 1 step 7 (optional re-sparsification) -> inter-pod stage.
     if pod_axis is not None and (cfg.resparsify_pods or cfg.wire != "dense"):
-        if cfg.resparsify_pods:
-            pod_key = jax.random.fold_in(key, 7)
-            synced, _, _ = compress_tree(cfg, pod_key, synced, stacked=stacked)
         if cfg.wire == "dense":
-            synced, wire2 = _sync_leaves_dense(synced, pod_axis)
+            # only reachable with resparsify_pods: the plain dense pod
+            # stage already ran in the intra/inter split above
+            pod_key = jax.random.fold_in(key, 7)
+            synced, _, _ = compress_tree(cfg, pod_key, synced,
+                                         stacked=stacked)
+            synced, wire_inter = _sync_leaves_dense(synced, pod_axis)
         else:
-            synced, wire2, ovf2 = _sync_leaves_gather(synced, pod_axis, cfg,
-                                                      stacked)
+            if cfg.resparsify_pods:
+                pod_key = jax.random.fold_in(key, 7)
+                items2, _, _ = compress_tree_sparse(cfg, pod_key, synced,
+                                                    stacked=stacked)
+            else:
+                items2 = _compact_items(cfg,
+                                        jax.tree_util.tree_flatten(synced)[0],
+                                        stk_leaves)
+            out_leaves, wire_inter, ovf2 = _bucketed_sync(
+                items2, jax.tree_util.tree_flatten(synced)[0], pod_axis, cfg)
+            synced = jax.tree_util.tree_unflatten(treedef, out_leaves)
             overflow = overflow + ovf2
-        wire = wire + wire2
 
     return synced, SyncStats(
         bits=stats.bits, dense_bits=stats.dense_bits,
-        wire_bytes=jnp.asarray(wire, jnp.float32),
+        wire_bytes=jnp.asarray(wire_intra + wire_inter, jnp.float32),
+        wire_bytes_intra=jnp.asarray(wire_intra, jnp.float32),
+        wire_bytes_inter=jnp.asarray(wire_inter, jnp.float32),
         density=stats.density, var_ratio=stats.var_ratio,
         overflow=overflow.astype(jnp.float32),
     )

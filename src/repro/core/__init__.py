@@ -1,15 +1,20 @@
 """The paper's primary contribution: unbiased gradient sparsification with
 optimal sampling probabilities, coding model, and the compressor zoo."""
 from repro.core.api import (CompressionConfig, TreeStats, compress_leaf,
-                            compress_tree, zeros_like_residual)
+                            compress_tree, compress_tree_sparse,
+                            zeros_like_residual)
 from repro.core.compressors import REGISTRY, CompressedGrad, make_compressor
+from repro.core.sparse import (Backend, PallasBackend, ReferenceBackend,
+                               SparseGrad, resolve_backend)
 from repro.core.sparsify import (closed_form_probabilities, expected_density,
                                  greedy_probabilities, uniform_probabilities,
                                  variance_inflation)
 
 __all__ = [
     "CompressionConfig", "TreeStats", "compress_leaf", "compress_tree",
-    "zeros_like_residual", "REGISTRY", "CompressedGrad", "make_compressor",
+    "compress_tree_sparse", "zeros_like_residual", "REGISTRY",
+    "CompressedGrad", "make_compressor", "Backend", "PallasBackend",
+    "ReferenceBackend", "SparseGrad", "resolve_backend",
     "closed_form_probabilities", "greedy_probabilities", "uniform_probabilities",
     "expected_density", "variance_inflation",
 ]

@@ -29,6 +29,9 @@ class CompressionConfig:
     float_bits: int = 32             # b in the coding model
     error_feedback: bool = False     # accumulate compression residual locally
     min_leaf_size: int = 256         # leaves smaller than this are sent dense
+    # backend selection (consumed by repro.core.sparse)
+    backend: str = "auto"            # auto | reference | pallas
+    kernel_interpret: bool | None = None  # force pallas interpret mode (None=auto)
     # wire/sync settings (consumed by repro.comm)
     wire: str = "dense"              # dense | gather | packed
     capacity_slack: float = 1.25     # k_cap = ceil(slack * rho * d) for gather wire
@@ -118,3 +121,68 @@ def compress_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
 
 def zeros_like_residual(params: Any) -> Any:
     return jax.tree.map(jnp.zeros_like, params)
+
+
+def compress_tree_sparse(cfg: CompressionConfig, key: jax.Array, grads: Any,
+                         stacked: Any | None = None):
+    """Compress every leaf straight into compact ``SparseGrad`` wire buffers.
+
+    The sparse twin of ``compress_tree`` for the gather/packed wires: the
+    backend emits ``(values, idx)`` directly, so there is exactly one
+    nonzero-selection per leaf per step and the dense Q(g) layout never
+    round-trips through HBM between compression and the collective.
+
+    Key-splitting mirrors ``compress_tree`` exactly (per-leaf split, per-layer
+    split for stacked leaves), so with the reference backend the sampled Q is
+    bit-identical to the dense-wire path under the same key — the dense/gather
+    equivalence tests rely on this.
+
+    Returns ``(items, treedef, stats)`` where ``items[i]`` is either
+    ``("dense", q_leaf)`` for tiny leaves (sent dense, like compress_tree's
+    passthrough) or ``("sparse", SparseGrad)``.
+    """
+    from repro.comm.compaction import capacity_for
+    from repro.core.sparse import resolve_backend
+
+    backend = resolve_backend(cfg.backend, cfg.kernel_interpret)
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    stk_leaves = (jax.tree_util.tree_flatten(stacked)[0]
+                  if stacked is not None else [False] * len(leaves))
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    items, bits, dense_bits, nnz, total, wvar = [], [], [], [], [], []
+    for leaf, k, stk in zip(leaves, keys, stk_leaves):
+        if leaf.size < cfg.min_leaf_size:     # tiny leaves: dense passthrough
+            cg = make_compressor("none", b=cfg.float_bits)(k, leaf)
+            items.append(("dense", cg.q))
+            bits.append(cg.bits)
+            nnz.append(jnp.sum((jnp.abs(leaf.reshape(-1)) > 0)
+                               .astype(jnp.float32)))
+            wvar.append(cg.var_ratio * float(leaf.size))
+        elif stk and leaf.ndim >= 2 and leaf.shape[0] > 1:
+            layers = leaf.shape[0]
+            d_l = leaf.size // layers
+            k_cap = capacity_for(d_l, cfg.rho, cfg.capacity_slack)
+            lk = jax.random.split(k, layers)
+            sg = jax.vmap(lambda kk, gg: backend.compress_sparse(
+                cfg, kk, gg.reshape(-1), k_cap))(lk,
+                                                 leaf.reshape(layers, d_l))
+            sg = dataclasses.replace(sg, shape=(d_l,))
+            items.append(("sparse", sg))
+            bits.append(jnp.sum(sg.bits))
+            nnz.append(jnp.sum(sg.nnz.astype(jnp.float32)))
+            wvar.append(jnp.mean(sg.var_ratio) * float(leaf.size))
+        else:
+            k_cap = capacity_for(leaf.size, cfg.rho, cfg.capacity_slack)
+            sg = backend.compress_sparse(cfg, k, leaf, k_cap)
+            items.append(("sparse", sg))
+            bits.append(sg.bits)
+            nnz.append(sg.nnz.astype(jnp.float32))
+            wvar.append(sg.var_ratio * float(leaf.size))
+        dense_bits.append(jnp.asarray(float(leaf.size * cfg.float_bits)))
+        total.append(float(leaf.size))
+
+    tot = sum(total)
+    stats = TreeStats(bits=sum(bits), dense_bits=sum(dense_bits),
+                      density=sum(nnz) / tot, var_ratio=sum(wvar) / tot)
+    return items, treedef, stats

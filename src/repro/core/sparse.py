@@ -1,0 +1,183 @@
+"""Compact sparse-gradient representation and the pluggable compression
+backend behind it.
+
+``SparseGrad`` is the wire-native form of a compressed gradient leaf: a
+fixed-capacity ``(values, idx)`` buffer pair plus per-leaf accounting. It is
+a registered pytree, so it vmaps (per-layer compression of scan-over-layers
+stacks), jits, and crosses shard_map boundaries like any array pair. The
+selection of nonzeros into the buffer happens exactly once, inside the
+backend — downstream consumers (repro.comm) exchange the buffers as-is and
+never re-discover nonzeros from a dense array.
+
+Backends (``CompressionConfig.backend``):
+  reference -- pure-jnp solvers from repro.core; one magnitude ``top_k``
+               per leaf. Bit-identical to the dense-wire compress_tree path
+               given the same PRNG key, which the dense-vs-gather
+               equivalence tests rely on.
+  pallas    -- fused stats -> lambda -> sample -> compact kernel path from
+               repro.kernels.sparsify (sort-free counting selection). Covers
+               gspar/greedy, the paper's production configuration; other
+               schemes fall back to reference per leaf. Off-TPU the kernels
+               run in interpreter mode.
+  auto      -- pallas on TPU, reference elsewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import compaction
+from repro.core.compressors import make_compressor
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SparseGrad:
+    """Fixed-capacity compact form of one compressed gradient leaf.
+
+    For a stacked (scan-over-layers) leaf all array fields carry a leading
+    layer axis and ``d``/``shape`` describe a single layer slice.
+    """
+    values: jax.Array        # [k_cap] nonzero values, original leaf dtype
+    idx: jax.Array           # [k_cap] int32 coordinates; padding slots hold
+                             # an index whose value slot is exactly zero
+    nnz: jax.Array           # realized nonzero count before any capacity drop
+    p_sum: jax.Array         # sum of sampling probabilities (E[nnz])
+    bits: jax.Array          # coding-model message bits for this leaf
+    var_ratio: jax.Array     # ||Q(g)||^2 / ||g||^2 (the paper's `var`)
+    d: int = dataclasses.field(metadata=dict(static=True), default=0)
+    shape: tuple = dataclasses.field(metadata=dict(static=True), default=())
+
+    @property
+    def k_cap(self) -> int:
+        return self.values.shape[-1]
+
+    def overflow(self) -> jax.Array:
+        """Coordinates dropped because nnz exceeded the buffer capacity."""
+        return jnp.maximum(self.nnz - self.k_cap, 0)
+
+    def expected_density(self) -> jax.Array:
+        """E[nnz]/d from the sampling probabilities — the p-accounting twin
+        of the realized ``nnz``; a persistent gap between the two flags a
+        miscalibrated solver (see bench_wire's expected-vs-realized row)."""
+        return jnp.sum(self.p_sum) / (self.d * max(1, self.p_sum.size))
+
+    def densify(self) -> jax.Array:
+        """Dense reconstruction (modulo overflow drops), original shape."""
+        vals = self.values.astype(jnp.float32)
+        if self.values.ndim == 2:        # stacked: per-layer scatter
+            dense = jax.vmap(lambda v, i: compaction.scatter(v, i, self.d))(
+                vals, self.idx)
+            return dense.reshape((self.values.shape[0],) + tuple(self.shape))
+        return compaction.scatter(vals, self.idx, self.d).reshape(self.shape)
+
+
+class Backend(Protocol):
+    """A gradient-compression backend: dense leaf in, SparseGrad out."""
+    name: str
+
+    def compress_sparse(self, cfg, key: jax.Array, g: jax.Array,
+                        k_cap: int) -> SparseGrad:
+        ...
+
+
+class ReferenceBackend:
+    """Dense-layout compressor zoo + a single magnitude top_k per leaf."""
+    name = "reference"
+
+    def compress_sparse(self, cfg, key, g, k_cap) -> SparseGrad:
+        if cfg.name == "topk":
+            # deterministic top-k needs no dense Q at all: one top_k serves
+            # as both the selection and the compaction.
+            flat = g.reshape(-1)
+            d = flat.shape[0]
+            k_target = max(1, int(round(cfg.rho * d)))
+            k = min(k_cap, k_target)
+            mag = jnp.abs(flat.astype(jnp.float32))
+            vals_mag, idx = jax.lax.top_k(mag, k_cap)
+            keep = jnp.arange(k_cap) < k
+            vals = jnp.where(keep & (vals_mag > 0), flat[idx],
+                             jnp.zeros((), flat.dtype))
+            q32 = vals.astype(jnp.float32)
+            den = jnp.sum(mag * mag)
+            var = jnp.where(den > 0, jnp.sum(q32 * q32)
+                            / jnp.where(den > 0, den, 1.0), 0.0)
+            logd = jnp.log2(jnp.asarray(float(d)))
+            bits = float(k_target) * (cfg.float_bits + logd) + cfg.float_bits
+            # nnz is the scheme's intended selection (bounded by the actual
+            # nonzero supply), pre-capacity — so overflow() reports the
+            # k_cap < k_target drop instead of silently hiding it.
+            nnz = jnp.minimum(jnp.sum((mag > 0).astype(jnp.int32)),
+                              jnp.int32(k_target))
+            return SparseGrad(values=vals, idx=idx.astype(jnp.int32),
+                              nnz=nnz,
+                              p_sum=jnp.asarray(float(k_target), jnp.float32),
+                              bits=jnp.asarray(bits, jnp.float32),
+                              var_ratio=var, d=d, shape=tuple(g.shape))
+        fn = make_compressor(cfg.name, **cfg.kwargs())
+        cg = fn(key, g)                      # elementwise; no selection inside
+        vals, idx, nnz = compaction.compact(cg.q, k_cap)
+        return SparseGrad(values=vals, idx=idx, nnz=nnz,
+                          p_sum=jnp.sum(cg.p), bits=cg.bits,
+                          var_ratio=cg.var_ratio, d=g.size,
+                          shape=tuple(g.shape))
+
+
+class PallasBackend:
+    """Fused kernel path (repro.kernels.sparsify) for gspar/greedy; other
+    schemes delegate to the reference implementation leaf-by-leaf."""
+    name = "pallas"
+
+    def __init__(self, interpret: bool = False):
+        self.interpret = interpret
+        self._fallback = ReferenceBackend()
+
+    def compress_sparse(self, cfg, key, g, k_cap) -> SparseGrad:
+        if cfg.name != "gspar" or cfg.algo != "greedy":
+            return self._fallback.compress_sparse(cfg, key, g, k_cap)
+        from repro.kernels.sparsify import ops
+        u = jax.random.uniform(key, g.shape, jnp.float32)  # pregenerated
+        vals, idx, nnz, lam = ops.gspar_sparse(
+            g.reshape(-1), u.reshape(-1), k_cap=k_cap, rho=cfg.rho,
+            num_iters=cfg.num_iters, interpret=self.interpret)
+        # accounting straight from the compact buffers + one elementwise pass
+        # over |g| (never a dense Q materialization).
+        a = jnp.abs(g.astype(jnp.float32)).reshape(-1)
+        d = a.shape[0]
+        p = jnp.where(a > 0, jnp.minimum(lam * a, 1.0), 0.0)
+        den = jnp.sum(a * a)
+        v32 = vals.astype(jnp.float32)
+        var = jnp.where(den > 0, jnp.sum(v32 * v32)
+                        / jnp.where(den > 0, den, 1.0), 0.0)
+        valid = vals != 0
+        sure = p[idx] >= 1.0
+        logd = jnp.log2(jnp.asarray(float(d)))
+        b = cfg.float_bits
+        n_a = jnp.sum((valid & sure).astype(jnp.float32))
+        n_b = jnp.sum((valid & ~sure).astype(jnp.float32))
+        bits = n_a * (b + logd) + jnp.minimum(2.0 * d, n_b * logd) + b
+        return SparseGrad(values=vals, idx=idx, nnz=nnz, p_sum=jnp.sum(p),
+                          bits=bits, var_ratio=var, d=d,
+                          shape=tuple(g.shape))
+
+
+def resolve_backend(name: str, interpret: bool | None = None) -> Backend:
+    """Backend registry with automatic platform fallback.
+
+    ``auto`` picks pallas on TPU (compiled kernels) and reference elsewhere.
+    An explicit ``pallas`` off-TPU runs the kernels in interpreter mode so
+    the fused path stays testable on CPU.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if name == "auto":
+        name = "pallas" if on_tpu else "reference"
+    if name == "reference":
+        return ReferenceBackend()
+    if name == "pallas":
+        return PallasBackend(interpret=(not on_tpu) if interpret is None
+                             else interpret)
+    raise ValueError(f"unknown backend {name!r}; "
+                     "have ('auto', 'reference', 'pallas')")

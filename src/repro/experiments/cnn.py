@@ -7,9 +7,6 @@ itself is not available offline; a class-conditional Gaussian-blob stand-in
 with identical shapes is used (documented in EXPERIMENTS.md)."""
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -13,8 +13,6 @@ Faithful details:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

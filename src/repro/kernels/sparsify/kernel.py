@@ -19,8 +19,6 @@ R a multiple of 8; tiles of (BLOCK_R, BLOCK_C) f32 live in VMEM
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -97,6 +95,49 @@ def sparsify_prng_2d(g: jax.Array, lam: jax.Array, seed: jax.Array,
         interpret=interpret,
         name="gspar_sparsify_prng",
     )(g, lam2, seed2)
+
+
+def _tail_stats_body(g_ref, t_ref, n_ref, l1_ref):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        n_ref[0, 0] = 0.0
+        l1_ref[0, 0] = 0.0
+
+    a = jnp.abs(g_ref[...].astype(jnp.float32))
+    below = a < t_ref[0, 0]
+    n_ref[0, 0] += jnp.sum(below.astype(jnp.float32))
+    l1_ref[0, 0] += jnp.sum(jnp.where(below, a, 0.0))
+
+
+def tail_stats_2d(g: jax.Array, thresh: jax.Array, interpret: bool = False):
+    """Single pass: (count, sum|g|) over the sub-threshold ("active",
+    non-saturated) coordinates |g| < thresh. Feeds Algorithm 3's
+    saturation-aware scalar rescale without a second full-vector pass in
+    XLA-land."""
+    r, c = g.shape
+    grid = (r // BLOCK_R, c // BLOCK_C)
+    t2 = jnp.asarray(thresh, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _tail_stats_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32)] * 2,
+        interpret=interpret,
+        name="gspar_tail_stats",
+    )(g, t2)
+    return out[0][0, 0], out[1][0, 0]
 
 
 def _stats_body(g_ref, l1_ref, l2_ref, mx_ref):

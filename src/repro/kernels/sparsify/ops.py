@@ -2,13 +2,17 @@
 -shaped gradient leaf into the kernel's [R, C] block layout, run, unpad.
 
 The end-to-end op ``gspar_sparsify`` performs Algorithm 3 (greedy) entirely
-fused: one stats pass (kernel 2), the scalar rescale loop in SMEM-sized
-arithmetic on host/XLA (O(iters) scalars), then one threshold-sample-scale
-pass (kernel 1). Two HBM reads + one write of g total.
+fused: one stats pass (kernel 2), ``num_iters`` saturation-aware tail-stats
+passes driving the scalar rescale loop (kernel 3; skipped work when nothing
+saturates, since the rescale factor is exactly 1 then), and one
+threshold-sample-scale pass (kernel 1). ``gspar_sparse`` additionally emits
+the compact ``(values, idx)`` wire buffers directly — the selection is a
+single O(d) counting pass (``jnp.nonzero`` with a static size), never a sort.
 """
 from __future__ import annotations
 
 import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -32,17 +36,73 @@ def gspar_stats(g: jax.Array, interpret: bool = False):
     return K.stats_2d(g2d, interpret=interpret)
 
 
-def greedy_lambda(l1: jax.Array, mx: jax.Array, rho: float, d: int,
-                  num_iters: int = 2) -> jax.Array:
-    """Scalar-only approximation of Algorithm 3's rescale loop.
+def _safe_div(num, den):
+    return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
 
-    The exact loop needs per-coordinate saturation counts; the kernel path
-    uses the standard first-order scalar iteration
-        lam_0 = rho * d / ||g||_1,  then clip so lam * max|g| feasibility
-    which matches Algorithm 3's fixed point when no coordinate saturates and
-    is conservative (never denser than target) otherwise."""
-    lam = rho * d / jnp.maximum(l1, 1e-30)
-    return lam
+
+def greedy_lambda(l1: jax.Array, mx: jax.Array, rho: float, d: int,
+                  num_iters: int = 2,
+                  tail_fn: Callable | None = None) -> jax.Array:
+    """Algorithm 3's scalar fixed point from gradient statistics.
+
+    Throughout the greedy iteration the probability vector keeps the form
+    p_i = min(lam * |g_i|, 1), so the per-coordinate rescale loop of
+    ``sparsify.greedy_probabilities`` collapses to a scalar recurrence that
+    only needs, per iteration, the count and l1-mass of the *active*
+    (non-saturated) set {i : |g_i| < 1/lam}:
+
+        lam_0 = rho * d / ||g||_1
+        c_k   = max(1, (rho*d - (d - n_active)) / (lam_k * l1_active))
+        lam_{k+1} = c_k * lam_k
+
+    ``tail_fn(thresh) -> (n_below, l1_below)`` supplies those two numbers
+    (kernel ``tail_stats_2d`` on the fused path, a jnp reduction in tests).
+    When ``tail_fn`` is None or ``lam_0 * max|g| <= 1`` no coordinate
+    saturates, every c_k is exactly 1, and lam_0 is already the fixed point;
+    the previous implementation stopped there unconditionally, which
+    under-delivers density (and over-weights the surviving tail) whenever
+    ``lam * max|g| > 1``.
+    """
+    d_f = jnp.float32(d)
+    rho_d = jnp.asarray(rho, jnp.float32) * d_f   # d may exceed int32
+    lam0 = _safe_div(rho_d, jnp.asarray(l1, jnp.float32))
+    if tail_fn is None or num_iters <= 0:
+        return lam0
+
+    def rescale(lam):
+        for _ in range(num_iters):
+            n_below, l1_below = tail_fn(_safe_div(jnp.float32(1.0), lam))
+            target = rho_d - (d_f - n_below)
+            c = _safe_div(target, lam * l1_below)
+            c = jnp.maximum(c, 1.0)              # c <= 1 -> converged (no-op)
+            lam = c * lam
+        return lam
+
+    # mx gates the tail-stats passes entirely: lam0 * max|g| <= 1 means no
+    # coordinate saturates and lam0 is already the fixed point.
+    return jax.lax.cond(lam0 * jnp.asarray(mx, jnp.float32) <= 1.0,
+                        lambda lam: lam, rescale, lam0)
+
+
+def _kernel_tail_fn(g2d: jax.Array, n: int, interpret: bool) -> Callable:
+    """tail_stats over the padded layout, corrected for the zero padding
+    (each pad slot counts as an active coordinate with zero mass)."""
+    pad = g2d.size - n
+
+    def tail(thresh):
+        n_below, l1_below = K.tail_stats_2d(g2d, thresh, interpret=interpret)
+        return n_below - jnp.float32(pad), l1_below
+    return tail
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "num_iters", "interpret"))
+def gspar_lambda(g: jax.Array, rho: float = 0.1, num_iters: int = 2,
+                 interpret: bool = False) -> jax.Array:
+    """Saturation-aware greedy lambda for a leaf, via the fused stats path."""
+    g2d, n, _, _ = _pad_2d(g.reshape(-1))
+    l1, _, mx = K.stats_2d(g2d, interpret=interpret)
+    return greedy_lambda(l1, mx, rho, n, num_iters,
+                         tail_fn=_kernel_tail_fn(g2d, n, interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("rho", "num_iters", "interpret"))
@@ -54,24 +114,64 @@ def gspar_sparsify(g: jax.Array, u: jax.Array, rho: float = 0.1,
     g2d, n, rows, c = _pad_2d(flat)
     u2d, _, _, _ = _pad_2d(u.reshape(-1).astype(jnp.float32))
     l1, l2, mx = K.stats_2d(g2d, interpret=interpret)
-    lam = greedy_lambda(l1, mx, rho, n, num_iters)
+    lam = greedy_lambda(l1, mx, rho, n, num_iters,
+                        tail_fn=_kernel_tail_fn(g2d, n, interpret))
     out = K.sparsify_2d(g2d, u2d, lam, interpret=interpret)
     return out.reshape(-1)[:n].reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("rho", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("rho", "num_iters", "k_cap", "interpret"))
+def gspar_sparse(g: jax.Array, u: jax.Array, k_cap: int, rho: float = 0.1,
+                 num_iters: int = 2, interpret: bool = False):
+    """Fused stats -> lambda -> sample -> compact: emits the wire buffers
+    ``(values[k_cap], idx[k_cap], nnz, lam)`` directly.
+
+    The compact stage is a single counting selection (first k_cap nonzeros in
+    coordinate order) — sort-free, unlike magnitude-ranked ``top_k``
+    compaction. Bernoulli survivors are exchangeable, so dropping by position
+    on (rare) overflow is as unbiased as dropping by magnitude is biased;
+    overflow itself stays ~impossible at the configured capacity slack.
+    Padding slots carry idx 0 with value exactly 0, so scatter-add
+    reconstruction is unaffected.
+    """
+    g2d, n, _, _ = _pad_2d(g.reshape(-1))
+    u2d, _, _, _ = _pad_2d(u.reshape(-1).astype(jnp.float32))
+    l1, _, mx = K.stats_2d(g2d, interpret=interpret)
+    lam = greedy_lambda(l1, mx, rho, n, num_iters,
+                        tail_fn=_kernel_tail_fn(g2d, n, interpret))
+    flat = K.sparsify_2d(g2d, u2d, lam, interpret=interpret).reshape(-1)[:n]
+    nz = flat != 0
+    nnz = jnp.sum(nz.astype(jnp.int32))
+    (idx,) = jnp.nonzero(nz, size=k_cap, fill_value=0)
+    idx = idx.astype(jnp.int32)
+    valid = jnp.arange(k_cap, dtype=jnp.int32) < jnp.minimum(nnz, k_cap)
+    vals = jnp.where(valid, flat[idx], jnp.zeros((), flat.dtype))
+    return vals, idx, nnz, lam
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "num_iters", "interpret"))
 def gspar_sparsify_prng(g: jax.Array, seed: jax.Array, rho: float = 0.1,
-                        interpret: bool = False) -> jax.Array:
+                        num_iters: int = 2, interpret: bool = False) -> jax.Array:
     """Production variant: on-core PRNG, no uniform input buffer.
 
-    interpret=True uses the TPU-interpret emulator (pltpu.InterpretParams):
-    the plain CPU interpreter has no lowering for the TPU PRNG primitives."""
+    interpret=True uses the TPU-interpret emulator (pltpu.InterpretParams)
+    when this jax ships it: the plain CPU interpreter has no lowering for the
+    TPU PRNG primitives. On older jax without the emulator we reproduce its
+    documented behaviour exactly — prng_random_bits yields zero bits off-TPU
+    (randomness is a hardware property), i.e. u == 0 and every coordinate
+    with p > 0 is kept — by running the uniform-input kernel with u = 0."""
     from jax.experimental.pallas import tpu as pltpu
     shape = g.shape
     flat = g.reshape(-1)
     g2d, n, rows, c = _pad_2d(flat)
     l1, l2, mx = K.stats_2d(g2d, interpret=interpret)
-    lam = greedy_lambda(l1, mx, rho, n)
+    lam = greedy_lambda(l1, mx, rho, n, num_iters,
+                        tail_fn=_kernel_tail_fn(g2d, n, interpret))
+    if interpret and not hasattr(pltpu, "InterpretParams"):
+        out = K.sparsify_2d(g2d, jnp.zeros_like(g2d, jnp.float32), lam,
+                            interpret=True)
+        return out.reshape(-1)[:n].reshape(shape)
     prng_interp = pltpu.InterpretParams() if interpret else False
     out = K.sparsify_prng_2d(g2d, lam, seed, interpret=prng_interp)
     return out.reshape(-1)[:n].reshape(shape)

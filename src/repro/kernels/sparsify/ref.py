@@ -27,3 +27,11 @@ def stats_ref(g: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     (sum |g|, sum g^2, max |g|) in fp32."""
     a = jnp.abs(g.astype(jnp.float32))
     return jnp.sum(a), jnp.sum(a * a), jnp.max(a)
+
+
+def tail_stats_ref(g: jax.Array, thresh) -> tuple[jax.Array, jax.Array]:
+    """(count, sum|g|) of the coordinates with |g| < thresh, in fp32."""
+    a = jnp.abs(g.astype(jnp.float32))
+    below = a < jnp.asarray(thresh, jnp.float32)
+    return (jnp.sum(below.astype(jnp.float32)),
+            jnp.sum(jnp.where(below, a, 0.0)))

@@ -38,7 +38,6 @@ from repro.dist import sharding as shd
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tf
-from repro.models.common import split_params
 from repro.optim.optimizers import adam
 from repro.roofline import analysis
 from repro.train import step as step_lib
@@ -93,7 +92,8 @@ def _probe_variant(cfg: "tf.ModelConfig", periods: int) -> "tf.ModelConfig":
 
 
 def _build_lowered(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
-                   compressor, rho, shard_local_sync=True):
+                   compressor, rho, shard_local_sync=True,
+                   backend="reference"):
     """Lower one step for the given (possibly probe-modified) config."""
     seq, global_batch, kind = registry.SHAPES[shape_name]
     param_rules = build_rules(spec, multi_pod, for_state=(mode == "fsdp"))
@@ -112,7 +112,7 @@ def _build_lowered(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
                                                       multi_pod)
             key_sds = jax.eval_shape(lambda: jax.random.key(0))
             comp = CompressionConfig(name=compressor, rho=rho, wire=wire,
-                                     min_leaf_size=4096)
+                                     backend=backend, min_leaf_size=4096)
             if mode == "compressed":
                 step = step_lib.make_compressed_train_step(
                     cfg, comp, opt, mesh, act_rules, multi_pod=multi_pod,
@@ -150,14 +150,15 @@ def _build_lowered(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
 
 
 def _probe_costs(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
-                 compressor, rho, shard_local_sync=True):
+                 compressor, rho, shard_local_sync=True,
+                 backend="reference"):
     """(flops, bytes, collective_bytes) per extra period + 1-period base."""
     out = []
     for periods in (1, 2):
         pcfg = _probe_variant(cfg, periods)
         lowered, _ = _build_lowered(pcfg, spec, shape_name, mesh, multi_pod,
                                     mode, wire, compressor, rho,
-                                    shard_local_sync)
+                                    shard_local_sync, backend)
         with jax.set_mesh(mesh):
             compiled = lowered.compile()
         r = analysis.analyze(compiled)
@@ -172,7 +173,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                rho: float = 0.01, remat: str | None = None,
                train_mode: str | None = None, probe: bool = True,
                attn_impl: str | None = None, q_chunk: int | None = None,
-               kv_chunk: int | None = None, shard_local_sync: bool = True):
+               kv_chunk: int | None = None, shard_local_sync: bool = True,
+               backend: str = "reference"):
     """Lower+compile one (arch, shape, mesh) combination. Returns a record."""
     spec = registry.get(arch)
     if shape_name not in spec.shapes:
@@ -198,7 +200,7 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     lowered, params_sds = _build_lowered(cfg, spec, shape_name, mesh,
                                          multi_pod, mode, wire, compressor,
-                                         rho, shard_local_sync)
+                                         rho, shard_local_sync, backend)
     record["lower_s"] = round(time.time() - t0, 1)
     t1 = time.time()
     with jax.set_mesh(mesh):
@@ -215,7 +217,7 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
         t2 = time.time()
         base, delta = _probe_costs(cfg, spec, shape_name, mesh, multi_pod,
                                    mode, wire, compressor, rho,
-                                   shard_local_sync)
+                                   shard_local_sync, backend)
         record["probe_s"] = round(time.time() - t2, 1)
         n_extra = cfg.num_periods - 1
         flops = base[0] + n_extra * delta[0]
@@ -268,6 +270,8 @@ def main(argv=None):
     ap.add_argument("--wire", default="gather",
                     choices=["dense", "gather", "packed"])
     ap.add_argument("--compressor", default="gspar")
+    ap.add_argument("--backend", default="reference",
+                    choices=["auto", "reference", "pallas"])
     ap.add_argument("--rho", type=float, default=0.01)
     ap.add_argument("--remat", default=None)
     ap.add_argument("--train-mode", default=None,
@@ -292,7 +296,8 @@ def main(argv=None):
                      remat=args.remat, train_mode=args.train_mode,
                      probe=not args.no_probe, attn_impl=args.attn_impl,
                      q_chunk=args.q_chunk, kv_chunk=args.kv_chunk,
-                     shard_local_sync=not args.global_sync)
+                     shard_local_sync=not args.global_sync,
+                     backend=args.backend)
     print(json.dumps(rec, indent=2, default=str))
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

@@ -11,11 +11,9 @@ multi-device run.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import checkpoint
 from repro.configs import registry
@@ -43,6 +41,9 @@ def main(argv=None):
     ap.add_argument("--rho", type=float, default=0.05)
     ap.add_argument("--wire", default="dense",
                     choices=["dense", "gather", "packed"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "reference", "pallas"],
+                    help="compression backend (pallas = fused kernels)")
     ap.add_argument("--mesh", default=None,
                     help="e.g. 4x2 => (data=4, model=2); default: all-data")
     ap.add_argument("--mode", default=None, choices=[None, "compressed", "fsdp"])
@@ -79,7 +80,8 @@ def main(argv=None):
     opt = (adam(args.lr) if args.optimizer == "adam" else sgd(args.lr))
     opt_state = opt.init(params)
     comp = CompressionConfig(name=args.compressor, rho=args.rho,
-                             wire=args.wire, min_leaf_size=1024)
+                             wire=args.wire, backend=args.backend,
+                             min_leaf_size=1024)
     with jax.set_mesh(mesh):
         if mode == "compressed":
             train_step = jax.jit(step_lib.make_compressed_train_step(

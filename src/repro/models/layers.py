@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import logical_constraint
-from repro.models.common import Initializer, Param
+from repro.models.common import Initializer
 
 
 # ---------------------------------------------------------------------------

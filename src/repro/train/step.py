@@ -21,9 +21,7 @@ accounting so benchmarks can plot loss-vs-communication.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -142,6 +140,8 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                 bits=jax.lax.psum(stats.bits, "model"),
                 dense_bits=jax.lax.psum(stats.dense_bits, "model"),
                 wire_bytes=jax.lax.psum(stats.wire_bytes, "model"),
+                wire_bytes_intra=jax.lax.psum(stats.wire_bytes_intra, "model"),
+                wire_bytes_inter=jax.lax.psum(stats.wire_bytes_inter, "model"),
                 density=jax.lax.pmean(stats.density, "model"),
                 var_ratio=jax.lax.pmean(stats.var_ratio, "model"),
                 overflow=jax.lax.psum(stats.overflow, "model"))
@@ -168,6 +168,8 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                                          var_scale=var_scale)
         metrics = {"loss": loss, "bits": stats.bits, "density": stats.density,
                    "var_ratio": stats.var_ratio, "wire_bytes": stats.wire_bytes,
+                   "wire_bytes_intra": stats.wire_bytes_intra,
+                   "wire_bytes_inter": stats.wire_bytes_inter,
                    "overflow": stats.overflow, "dense_bits": stats.dense_bits}
         return new_params, new_opt, metrics
 
