@@ -52,37 +52,53 @@ def run(quick: bool = False):
 
     for backend in ("reference", "pallas"):
         for wire in ("dense", "gather", "packed"):
-            cfg = CompressionConfig(name="gspar", rho=rho, wire=wire,
-                                    min_leaf_size=256, backend=backend)
+            for ef in (False, True):
+                cfg = CompressionConfig(name="gspar", rho=rho, wire=wire,
+                                        min_leaf_size=256, backend=backend,
+                                        error_feedback=ef)
 
-            def step(key, g):
-                return sync_tree(cfg, key, g, data_axis="data")
+                # EF rows run the same pipeline plus the residual carry —
+                # measuring the cost of one extra params-sized read/write
+                if ef:
+                    def step(key, g, res):
+                        return sync_tree(cfg, key, g, data_axis="data",
+                                         residual=res)
+                    args = (jax.random.key(7), grads,
+                            jax.tree.map(jnp.zeros_like, grads))
+                else:
+                    def step(key, g):
+                        synced, _, stats = sync_tree(cfg, key, g,
+                                                     data_axis="data")
+                        return synced, stats
+                    args = (jax.random.key(7), grads)
 
-            with jax.set_mesh(mesh):
-                fn = jax.jit(jax.shard_map(
-                    step, mesh=mesh, in_specs=(P(), P()),
-                    out_specs=(P(), P()), axis_names={"data"},
-                    check_vma=False))
-                key = jax.random.key(7)
-                synced, stats = fn(key, grads)   # compile + warm
-                jax.block_until_ready(synced)
-                us = timed_us(lambda: jax.block_until_ready(fn(key, grads)),
-                              iters=2 if quick else 5)
-            rec = {
-                "us_per_step": us,
-                "wire_bytes": float(stats.wire_bytes),
-                "dense_bytes": float(dense_bytes),
-                "bits": float(stats.bits),
-                "dense_bits": float(stats.dense_bits),
-                "density": float(stats.density),
-                "overflow": float(stats.overflow),
-            }
-            payload[f"{backend}:{wire}"] = rec
-            rows.append((f"wire:{backend}:{wire}", us,
-                         f"wire_bytes={rec['wire_bytes']:.3g}"
-                         f"(dense={float(dense_bytes):.3g});"
-                         f"bits={rec['bits']:.3g};"
-                         f"density={rec['density']:.4f}"))
+                specs = (P(),) * len(args)
+                with jax.set_mesh(mesh):
+                    fn = jax.jit(jax.shard_map(
+                        step, mesh=mesh, in_specs=specs,
+                        out_specs=(P(),) * (3 if ef else 2),
+                        axis_names={"data"}, check_vma=False))
+                    out = fn(*args)                    # compile + warm
+                    stats = out[-1]
+                    jax.block_until_ready(out[0])
+                    us = timed_us(lambda: jax.block_until_ready(fn(*args)[0]),
+                                  iters=2 if quick else 5)
+                rec = {
+                    "us_per_step": us,
+                    "wire_bytes": float(stats.wire_bytes),
+                    "dense_bytes": float(dense_bytes),
+                    "bits": float(stats.bits),
+                    "dense_bits": float(stats.dense_bits),
+                    "density": float(stats.density),
+                    "overflow": float(stats.overflow),
+                }
+                tag = f"{backend}:{wire}" + (":ef" if ef else "")
+                payload[tag] = rec
+                rows.append((f"wire:{tag}", us,
+                             f"wire_bytes={rec['wire_bytes']:.3g}"
+                             f"(dense={float(dense_bytes):.3g});"
+                             f"bits={rec['bits']:.3g};"
+                             f"density={rec['density']:.4f}"))
 
     # solver calibration: expected density (sum of sampling probabilities,
     # SparseGrad.p_sum) vs realized nnz over the leaf set — a persistent gap
@@ -90,8 +106,8 @@ def run(quick: bool = False):
     from repro.core.api import compress_tree_sparse
     cal_cfg = CompressionConfig(name="gspar", rho=rho, wire="gather",
                                 min_leaf_size=256, backend="reference")
-    items, _, _ = compress_tree_sparse(cal_cfg, jax.random.key(11), grads,
-                                       stacked=stacked)
+    items, _, _, _ = compress_tree_sparse(cal_cfg, jax.random.key(11), grads,
+                                          stacked=stacked)
     sparse = [sg for kind, sg in items if kind == "sparse"]
     total_d = sum(sg.d * max(1, sg.p_sum.size) for sg in sparse)
     exp_nnz = sum(float(jnp.sum(sg.p_sum)) for sg in sparse)

@@ -113,6 +113,26 @@ def _compact_items(cfg: CompressionConfig, leaves: list, stk_leaves: list):
     return items
 
 
+def _compaction_drop(cfg: CompressionConfig, leaf: jax.Array,
+                     sg: SparseGrad) -> jax.Array:
+    """What the fixed-capacity pod message failed to carry of ``leaf``:
+    leaf minus the scatter of the transmitted buffers (values rounded to
+    the wire dtype on 'packed'). Nonzero exactly on compaction overflow —
+    the pod-union of M workers' coordinates routinely exceeds one worker's
+    k_cap — and on bf16 rounding of kept values."""
+    vals = sg.values
+    if cfg.wire == "packed":
+        vals = vals.astype(jnp.bfloat16)
+    vals = vals.astype(jnp.float32)
+    if sg.values.ndim == 2:                  # stacked: per-layer scatter
+        sent = jax.vmap(lambda v, i: compaction.scatter(v, i, sg.d))(
+            vals, sg.idx).reshape(-1)
+    else:
+        sent = compaction.scatter(vals, sg.idx, sg.d)
+    drop = leaf.astype(jnp.float32).reshape(-1) - sent
+    return drop.reshape(leaf.shape).astype(leaf.dtype)
+
+
 def _bucketed_sync(items: list, leaves: list, axis: Axis,
                    cfg: CompressionConfig):
     """Exchange all leaves with one collective per (kind, wire-dtype) group.
@@ -195,15 +215,28 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
 def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
               data_axis: Axis = "data", pod_axis: str | None = None,
               stacked: Any | None = None,
-              fold_worker_key: bool = True) -> tuple[Any, SyncStats]:
+              fold_worker_key: bool = True,
+              residual: Any | None = None) -> tuple[Any, Any, SyncStats]:
     """Compress local grads per leaf, exchange over data (and pod) axes.
 
-    Returns the synchronized (averaged) gradient tree and SyncStats. Must be
-    called where ``data_axis`` (and ``pod_axis``) are manual shard_map axes.
+    Returns ``(synced, new_residual, stats)``: the synchronized (averaged)
+    gradient tree, the updated per-worker error-feedback residual (None
+    unless ``cfg.error_feedback``), and SyncStats. Must be called where
+    ``data_axis`` (and ``pod_axis``) are manual shard_map axes.
     ``stacked`` marks scan-over-layers leaves (compressed per layer).
     ``fold_worker_key=False`` when the caller already folded worker indices
     (e.g. from an enclosing shard_map region where axis_index is available).
+
+    With ``cfg.error_feedback`` the caller MUST pass this worker's carried
+    ``residual`` tree (raises otherwise — the flag is never a silent no-op):
+    it is added to the gradients before compression and the new compression
+    error comes back for the caller to carry into the next step.
     """
+    if cfg.error_feedback and residual is None:
+        raise ValueError(
+            "sync_tree: error_feedback=True requires the per-worker residual "
+            "tree (carry a FeedbackState through the train step); refusing "
+            "to silently drop the compression error.")
     axes = (data_axis,) if isinstance(data_axis, str) else tuple(data_axis)
     if pod_axis is not None:
         axes = axes + (pod_axis,)
@@ -217,22 +250,25 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
 
     wire_inter = 0.0
     if cfg.wire == "dense":
-        q_tree, _, stats = compress_tree(cfg, key, grads, stacked=stacked)
+        q_tree, new_res, stats = compress_tree(cfg, key, grads,
+                                               residual=residual,
+                                               stacked=stacked)
         synced, wire_intra = _sync_leaves_dense(q_tree, data_axis)
         if pod_axis is not None and not cfg.resparsify_pods:
             # hierarchical mean (equal pod sizes), so the per-stage byte
             # split stays honest: intra = data-axis stage, inter = pod stage
             synced, wire_inter = _sync_leaves_dense(synced, pod_axis)
-    elif cfg.wire in ("gather", "packed"):
-        items, _, stats = compress_tree_sparse(cfg, key, grads,
-                                               stacked=stacked)
+    else:   # gather | packed (validated at CompressionConfig construction)
+        items, new_res, _, stats = compress_tree_sparse(cfg, key, grads,
+                                                        stacked=stacked,
+                                                        residual=residual)
         out_leaves, wire_intra, overflow = _bucketed_sync(items, leaves,
                                                           data_axis, cfg)
         synced = jax.tree_util.tree_unflatten(treedef, out_leaves)
-    else:
-        raise ValueError(f"unknown wire format {cfg.wire!r}")
 
     # Algorithm 1 step 7 (optional re-sparsification) -> inter-pod stage.
+    # (error_feedback + resparsify_pods is rejected at config validation:
+    # the pod-stage recompression error below is not carried anywhere.)
     if pod_axis is not None and (cfg.resparsify_pods or cfg.wire != "dense"):
         if cfg.wire == "dense":
             # only reachable with resparsify_pods: the plain dense pod
@@ -242,20 +278,34 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
                                          stacked=stacked)
             synced, wire_inter = _sync_leaves_dense(synced, pod_axis)
         else:
+            synced_leaves = jax.tree_util.tree_flatten(synced)[0]
             if cfg.resparsify_pods:
                 pod_key = jax.random.fold_in(key, 7)
-                items2, _, _ = compress_tree_sparse(cfg, pod_key, synced,
-                                                    stacked=stacked)
+                items2, _, _, _ = compress_tree_sparse(cfg, pod_key, synced,
+                                                       stacked=stacked)
             else:
-                items2 = _compact_items(cfg,
-                                        jax.tree_util.tree_flatten(synced)[0],
-                                        stk_leaves)
+                items2 = _compact_items(cfg, synced_leaves, stk_leaves)
+                if cfg.error_feedback:
+                    # the pod-union of the data-axis workers' coordinates
+                    # routinely exceeds one message's k_cap, so the
+                    # deterministic pod compaction drops real mass every
+                    # step: fold it into this worker's residual (every
+                    # worker of the pod carries the same drop, so the next
+                    # intra-pod mean reinstates it — exactly the 1/P global
+                    # weight the dense pod stage would have given it)
+                    drops = [jnp.zeros_like(leaf) if kind == "dense"
+                             else _compaction_drop(cfg, leaf, payload)
+                             for (kind, payload), leaf in zip(items2,
+                                                              synced_leaves)]
+                    new_res = jax.tree.map(
+                        lambda r, d: r + d, new_res,
+                        jax.tree_util.tree_unflatten(treedef, drops))
             out_leaves, wire_inter, ovf2 = _bucketed_sync(
-                items2, jax.tree_util.tree_flatten(synced)[0], pod_axis, cfg)
+                items2, synced_leaves, pod_axis, cfg)
             synced = jax.tree_util.tree_unflatten(treedef, out_leaves)
             overflow = overflow + ovf2
 
-    return synced, SyncStats(
+    return synced, new_res, SyncStats(
         bits=stats.bits, dense_bits=stats.dense_bits,
         wire_bytes=jnp.asarray(wire_intra + wire_inter, jnp.float32),
         wire_bytes_intra=jnp.asarray(wire_intra, jnp.float32),

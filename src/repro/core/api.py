@@ -2,9 +2,12 @@
 
 The paper applies sparsification independently per layer (section 5.2); here a
 "layer" is a pytree leaf. ``compress_tree`` splits the PRNG key per leaf,
-compresses each, and aggregates accounting. ``ErrorFeedback`` (beyond-paper,
-Seide et al. 2014 / Karimireddy et al. 2019) is provided for the biased top-k
-baseline and as an optional add-on for any scheme.
+compresses each, and aggregates accounting. Error feedback (beyond-paper,
+Seide et al. 2014 / Alistarh et al. 2018) threads a per-worker residual tree
+through both the dense and the sparse (``compress_tree_sparse``) paths; it is
+required for the biased top-k baseline and an optional add-on for any
+sparsifying scheme. A config that asks for error feedback without residual
+state raises — the flag is never a silent no-op.
 """
 from __future__ import annotations
 
@@ -17,9 +20,21 @@ import jax.numpy as jnp
 from repro.core.compressors import CompressedGrad, make_compressor
 
 
+# Schemes whose messages are ~dense (realized density near 1, or data-
+# dependent and unbounded): the sparse wires size their fixed buffers as
+# k_cap = ceil(slack * rho * d), so these schemes would overflow massively
+# and the sync would silently top-k-truncate the message into a biased
+# average. They must travel on the dense wire.
+DENSE_ONLY_SCHEMES = ("qsgd", "terngrad", "none")
+
+
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
-    """Static configuration for the gradient-compression stage."""
+    """Static configuration for the gradient-compression stage.
+
+    Invalid (scheme, wire, error_feedback) combinations raise here, at
+    construction time — never silently degrade at run time.
+    """
     name: str = "gspar"              # registry key: gspar|unisp|topk|qsgd|terngrad|none
     rho: float = 0.1                 # target density (gspar-greedy, unisp, topk)
     eps: float = 1.0                 # variance budget (gspar-closed)
@@ -36,6 +51,31 @@ class CompressionConfig:
     wire: str = "dense"              # dense | gather | packed
     capacity_slack: float = 1.25     # k_cap = ceil(slack * rho * d) for gather wire
     resparsify_pods: bool = False    # Alg.1 step 7 -> hierarchical pod-level resync
+
+    def __post_init__(self):
+        if self.wire not in ("dense", "gather", "packed"):
+            raise ValueError(f"unknown wire format {self.wire!r}; "
+                             "have ('dense', 'gather', 'packed')")
+        if self.wire != "dense" and self.name in DENSE_ONLY_SCHEMES:
+            raise ValueError(
+                f"unsupported (scheme, wire) pair ({self.name!r}, "
+                f"{self.wire!r}): {self.name} emits ~d nonzeros but the "
+                f"sparse wire sizes its buffers as k_cap = "
+                f"ceil({self.capacity_slack} * rho * d), so the sync would "
+                "silently top-k-truncate the message into a biased average. "
+                "Use wire='dense' for this scheme.")
+        if self.error_feedback:
+            if self.name == "none":
+                raise ValueError(
+                    "unsupported (scheme, error_feedback) pair ('none', "
+                    "True): the identity compressor has zero residual; "
+                    "error feedback would be a silent no-op.")
+            if self.resparsify_pods:
+                raise ValueError(
+                    "unsupported (error_feedback, resparsify_pods) pair "
+                    "(True, True): the pod-stage re-sparsification performs "
+                    "a second compression whose residual is not carried; "
+                    "its error would be silently dropped every step.")
 
     def kwargs(self) -> dict[str, Any]:
         if self.name == "gspar":
@@ -65,19 +105,32 @@ def compress_leaf(cfg: CompressionConfig, key: jax.Array, g: jax.Array) -> Compr
     return fn(key, g)
 
 
+def _require_residual(cfg: CompressionConfig, residual: Any | None,
+                      where: str) -> None:
+    if cfg.error_feedback and residual is None:
+        raise ValueError(
+            f"error_feedback=True but no residual state reached {where}: "
+            "the compression error would be silently dropped. Thread a "
+            "FeedbackState (repro.optim.optimizers.init_feedback) through "
+            "the train step, or pass a zeros residual tree explicitly.")
+
+
 def compress_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
                   residual: Any | None = None,
                   stacked: Any | None = None) -> tuple[Any, Any, TreeStats]:
     """Compress every leaf of ``grads``; returns (q_tree, new_residual, stats).
 
-    If ``cfg.error_feedback`` the residual tree (same structure) is added to
-    the gradient before compression and the compression error is carried over.
+    If ``cfg.error_feedback`` the residual tree (same structure, REQUIRED —
+    raises if absent) is added to the gradient before compression and the
+    compression error ``target - Q(target)`` is returned as the new residual;
+    without error feedback ``new_residual`` is None.
 
     ``stacked`` (optional, same structure, bool leaves) marks leaves whose
     leading axis is a scan-over-layers stack: those are compressed per layer
     (vmap over axis 0) — the paper applies sparsification independently per
     layer, and it keeps flattened sizes within int32 indexing range.
     """
+    _require_residual(cfg, residual, "compress_tree")
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     res_leaves = (jax.tree_util.tree_flatten(residual)[0]
                   if residual is not None else [None] * len(leaves))
@@ -87,7 +140,7 @@ def compress_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
 
     q_leaves, new_res, bits, dense_bits, nnz, total, wvar = [], [], [], [], [], [], []
     for leaf, res, k, stk in zip(leaves, res_leaves, keys, stk_leaves):
-        target = leaf + res if (cfg.error_feedback and res is not None) else leaf
+        target = leaf + res if cfg.error_feedback else leaf
         if leaf.size < cfg.min_leaf_size:     # tiny leaves: dense passthrough
             cg = make_compressor("none", b=cfg.float_bits)(k, target)
             cg_bits, cg_var = cg.bits, cg.var_ratio
@@ -100,8 +153,8 @@ def compress_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
             cg = compress_leaf(cfg, k, target)
             cg_bits, cg_var = cg.bits, cg.var_ratio
         q_leaves.append(cg.q)
-        new_res.append((target - cg.q).astype(leaf.dtype)
-                       if cfg.error_feedback else jnp.zeros_like(leaf))
+        if cfg.error_feedback:
+            new_res.append((target - cg.q).astype(leaf.dtype))
         bits.append(cg_bits)
         dense_bits.append(jnp.asarray(float(leaf.size * cfg.float_bits)))
         nnz.append(jnp.sum((jnp.abs(cg.q.reshape(-1)) > 0).astype(jnp.float32)))
@@ -115,7 +168,8 @@ def compress_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
         var_ratio=sum(wvar) / tot,
     )
     q_tree = jax.tree_util.tree_unflatten(treedef, q_leaves)
-    res_tree = jax.tree_util.tree_unflatten(treedef, new_res)
+    res_tree = (jax.tree_util.tree_unflatten(treedef, new_res)
+                if cfg.error_feedback else None)
     return q_tree, res_tree, stats
 
 
@@ -124,7 +178,8 @@ def zeros_like_residual(params: Any) -> Any:
 
 
 def compress_tree_sparse(cfg: CompressionConfig, key: jax.Array, grads: Any,
-                         stacked: Any | None = None):
+                         stacked: Any | None = None,
+                         residual: Any | None = None):
     """Compress every leaf straight into compact ``SparseGrad`` wire buffers.
 
     The sparse twin of ``compress_tree`` for the gather/packed wires: the
@@ -132,31 +187,47 @@ def compress_tree_sparse(cfg: CompressionConfig, key: jax.Array, grads: Any,
     nonzero-selection per leaf per step and the dense Q(g) layout never
     round-trips through HBM between compression and the collective.
 
+    With ``cfg.error_feedback`` the residual tree (same structure, REQUIRED)
+    is added to each leaf before compression, and the new residual is
+    computed from the compact buffers — ``target`` minus a scatter-subtract
+    of ``(values, idx)``, per layer for stacked leaves — so the dense Q(g)
+    layout still never materializes. Tiny dense-passthrough leaves transmit
+    the full target, so their residual is exactly zero.
+
     Key-splitting mirrors ``compress_tree`` exactly (per-leaf split, per-layer
     split for stacked leaves), so with the reference backend the sampled Q is
     bit-identical to the dense-wire path under the same key — the dense/gather
     equivalence tests rely on this.
 
-    Returns ``(items, treedef, stats)`` where ``items[i]`` is either
-    ``("dense", q_leaf)`` for tiny leaves (sent dense, like compress_tree's
-    passthrough) or ``("sparse", SparseGrad)``.
+    Returns ``(items, new_residual, treedef, stats)`` where ``items[i]`` is
+    either ``("dense", q_leaf)`` for tiny leaves (sent dense, like
+    compress_tree's passthrough) or ``("sparse", SparseGrad)``, and
+    ``new_residual`` is a grads-structured tree (None without error
+    feedback).
     """
     from repro.comm.compaction import capacity_for
     from repro.core.sparse import resolve_backend
 
+    _require_residual(cfg, residual, "compress_tree_sparse")
     backend = resolve_backend(cfg.backend, cfg.kernel_interpret)
+    ef = cfg.error_feedback
     leaves, treedef = jax.tree_util.tree_flatten(grads)
+    res_leaves = (jax.tree_util.tree_flatten(residual)[0]
+                  if residual is not None else [None] * len(leaves))
     stk_leaves = (jax.tree_util.tree_flatten(stacked)[0]
                   if stacked is not None else [False] * len(leaves))
     keys = jax.random.split(key, max(len(leaves), 1))
 
-    items, bits, dense_bits, nnz, total, wvar = [], [], [], [], [], []
-    for leaf, k, stk in zip(leaves, keys, stk_leaves):
+    items, new_res, bits, dense_bits, nnz, total, wvar = [], [], [], [], [], [], []
+    for leaf, res, k, stk in zip(leaves, res_leaves, keys, stk_leaves):
+        target = leaf + res if ef else leaf
         if leaf.size < cfg.min_leaf_size:     # tiny leaves: dense passthrough
-            cg = make_compressor("none", b=cfg.float_bits)(k, leaf)
+            cg = make_compressor("none", b=cfg.float_bits)(k, target)
             items.append(("dense", cg.q))
+            if ef:                            # full target sent -> zero error
+                new_res.append(jnp.zeros_like(leaf))
             bits.append(cg.bits)
-            nnz.append(jnp.sum((jnp.abs(leaf.reshape(-1)) > 0)
+            nnz.append(jnp.sum((jnp.abs(target.reshape(-1)) > 0)
                                .astype(jnp.float32)))
             wvar.append(cg.var_ratio * float(leaf.size))
         elif stk and leaf.ndim >= 2 and leaf.shape[0] > 1:
@@ -164,9 +235,14 @@ def compress_tree_sparse(cfg: CompressionConfig, key: jax.Array, grads: Any,
             d_l = leaf.size // layers
             k_cap = capacity_for(d_l, cfg.rho, cfg.capacity_slack)
             lk = jax.random.split(k, layers)
-            sg = jax.vmap(lambda kk, gg: backend.compress_sparse(
-                cfg, kk, gg.reshape(-1), k_cap))(lk,
-                                                 leaf.reshape(layers, d_l))
+            if ef:
+                sg, res_l = jax.vmap(lambda kk, gg: backend.compress_sparse_ef(
+                    cfg, kk, gg, k_cap))(lk, target.reshape(layers, d_l))
+                new_res.append(res_l.reshape(leaf.shape).astype(leaf.dtype))
+            else:
+                sg = jax.vmap(lambda kk, gg: backend.compress_sparse(
+                    cfg, kk, gg.reshape(-1), k_cap))(lk,
+                                                     leaf.reshape(layers, d_l))
             sg = dataclasses.replace(sg, shape=(d_l,))
             items.append(("sparse", sg))
             bits.append(jnp.sum(sg.bits))
@@ -174,7 +250,13 @@ def compress_tree_sparse(cfg: CompressionConfig, key: jax.Array, grads: Any,
             wvar.append(jnp.mean(sg.var_ratio) * float(leaf.size))
         else:
             k_cap = capacity_for(leaf.size, cfg.rho, cfg.capacity_slack)
-            sg = backend.compress_sparse(cfg, k, leaf, k_cap)
+            if ef:
+                sg, res_leaf = backend.compress_sparse_ef(cfg, k, target,
+                                                          k_cap)
+                new_res.append(res_leaf.reshape(leaf.shape)
+                               .astype(leaf.dtype))
+            else:
+                sg = backend.compress_sparse(cfg, k, leaf, k_cap)
             items.append(("sparse", sg))
             bits.append(sg.bits)
             nnz.append(sg.nnz.astype(jnp.float32))
@@ -185,4 +267,5 @@ def compress_tree_sparse(cfg: CompressionConfig, key: jax.Array, grads: Any,
     tot = sum(total)
     stats = TreeStats(bits=sum(bits), dense_bits=sum(dense_bits),
                       density=sum(nnz) / tot, var_ratio=sum(wvar) / tot)
-    return items, treedef, stats
+    res_tree = jax.tree_util.tree_unflatten(treedef, new_res) if ef else None
+    return items, res_tree, treedef, stats

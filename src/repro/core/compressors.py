@@ -75,15 +75,26 @@ def unisp(key, g, *, rho: float = 0.1, b: int = 32) -> CompressedGrad:
 
 
 def topk(key, g, *, rho: float = 0.1, b: int = 32) -> CompressedGrad:
-    """Deterministic top-k by magnitude. BIASED -- pair with error feedback."""
+    """Deterministic top-k by magnitude. BIASED -- pair with error feedback.
+
+    Selection is by ``top_k`` *indices* with a strict k cut, not by a
+    magnitude threshold: a ``|g| >= thresh`` mask over-selects whenever
+    magnitudes tie at the k-th value (an all-ones gradient would transmit
+    all d coordinates while ``bits`` claims k), and marks p = 1 on
+    exactly-zero coordinates. Mirrors ``ReferenceBackend.compress_sparse``'s
+    topk branch, which the dense/gather equivalence tests compare against.
+    """
     del key
     flat = g.reshape(-1)
     d = flat.shape[0]
     k = max(1, int(round(rho * d)))
-    thresh = jax.lax.top_k(jnp.abs(flat).astype(jnp.float32), k)[0][-1]
-    mask = jnp.abs(flat) >= thresh
-    q = jnp.where(mask, flat, 0).reshape(g.shape)
-    p = mask.astype(jnp.float32).reshape(g.shape)
+    vals_mag, idx = jax.lax.top_k(jnp.abs(flat).astype(jnp.float32), k)
+    keep = vals_mag > 0                      # never transmit exact zeros
+    q = (jnp.zeros_like(flat).at[idx]
+         .set(jnp.where(keep, flat[idx], jnp.zeros((), flat.dtype)))
+         .reshape(g.shape))
+    p = (jnp.zeros((d,), jnp.float32).at[idx].set(keep.astype(jnp.float32))
+         .reshape(g.shape))
     bits = float(k) * (b + jnp.log2(jnp.asarray(float(d)))) + b
     return _finish(g, q, p, bits)
 

@@ -83,6 +83,40 @@ class Backend(Protocol):
                         k_cap: int) -> SparseGrad:
         ...
 
+    def compress_sparse_ef(self, cfg, key: jax.Array, g: jax.Array,
+                           k_cap: int) -> tuple[SparseGrad, jax.Array]:
+        """Error-feedback variant: ``g`` is the EF target (grad + carried
+        residual); also returns the new residual ``g - densify(SparseGrad)``
+        computed from the compact buffers (one scatter-subtract — the dense
+        Q(g) layout is never materialized)."""
+        ...
+
+
+def _wire_dtype(cfg):
+    """Value dtype the sparse wire actually carries (bf16 on 'packed')."""
+    return jnp.bfloat16 if cfg.wire == "packed" else None
+
+
+def _residual_from_buffers(g: jax.Array, sg: SparseGrad,
+                           wire_dtype=None) -> jax.Array:
+    """target minus the *transmitted* values, from the compact (values, idx)
+    pair: a single scatter-subtract into the target. Padding slots carry
+    exact zeros, so they are no-ops; elementwise it equals
+    ``g - sg.densify()`` bit-for-bit — and hence the dense-wire residual
+    ``target - Q(target)`` whenever nothing overflows the capacity (which
+    the k_cap sizing guarantees; on overflow this form re-carries the
+    dropped survivors' error rather than losing it). ``wire_dtype`` rounds
+    the subtracted values to what the wire carries (bf16 on the packed
+    wire), so the quantization error of kept values is absorbed into the
+    residual instead of silently dropped."""
+    flat = g.reshape(-1)
+    vals = sg.values.reshape(-1)
+    if wire_dtype is not None:
+        vals = vals.astype(wire_dtype)
+    res = flat.at[sg.idx.reshape(-1)].add(-vals.astype(flat.dtype),
+                                          mode="drop")
+    return res.reshape(g.shape)
+
 
 class ReferenceBackend:
     """Dense-layout compressor zoo + a single magnitude top_k per leaf."""
@@ -125,6 +159,10 @@ class ReferenceBackend:
                           var_ratio=cg.var_ratio, d=g.size,
                           shape=tuple(g.shape))
 
+    def compress_sparse_ef(self, cfg, key, g, k_cap):
+        sg = self.compress_sparse(cfg, key, g, k_cap)
+        return sg, _residual_from_buffers(g, sg, _wire_dtype(cfg))
+
 
 class PallasBackend:
     """Fused kernel path (repro.kernels.sparsify) for gspar/greedy; other
@@ -143,6 +181,29 @@ class PallasBackend:
         vals, idx, nnz, lam = ops.gspar_sparse(
             g.reshape(-1), u.reshape(-1), k_cap=k_cap, rho=cfg.rho,
             num_iters=cfg.num_iters, interpret=self.interpret)
+        return self._account(cfg, g, vals, idx, nnz, lam)
+
+    def compress_sparse_ef(self, cfg, key, g, k_cap):
+        if cfg.name != "gspar" or cfg.algo != "greedy":
+            return self._fallback.compress_sparse_ef(cfg, key, g, k_cap)
+        from repro.kernels.sparsify import ops
+        u = jax.random.uniform(key, g.shape, jnp.float32)
+        # the fused kernel emits the residual g - Q(g) in the same pass as
+        # Q itself: one extra HBM write, no extra read.
+        vals, idx, nnz, lam, res = ops.gspar_sparse_ef(
+            g.reshape(-1), u.reshape(-1), k_cap=k_cap, rho=cfg.rho,
+            num_iters=cfg.num_iters, interpret=self.interpret)
+        wdt = _wire_dtype(cfg)
+        if wdt is not None:
+            # the packed wire rounds kept values to bf16: fold the rounding
+            # error into the residual with one k_cap-sized scatter (the
+            # fused kernel subtracted the pre-rounding values)
+            delta = vals - vals.astype(wdt).astype(vals.dtype)
+            res = res.at[idx].add(delta.astype(res.dtype), mode="drop")
+        return (self._account(cfg, g, vals, idx, nnz, lam),
+                res.reshape(g.shape))
+
+    def _account(self, cfg, g, vals, idx, nnz, lam) -> SparseGrad:
         # accounting straight from the compact buffers + one elementwise pass
         # over |g| (never a dense Q materialization).
         a = jnp.abs(g.astype(jnp.float32)).reshape(-1)

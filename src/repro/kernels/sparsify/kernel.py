@@ -37,6 +37,22 @@ def _sparsify_body(g_ref, u_ref, lam_ref, out_ref):
     out_ref[...] = jnp.where(z, g / safe_p, 0.0).astype(out_ref.dtype)
 
 
+def _sparsify_ef_body(g_ref, u_ref, lam_ref, out_ref, res_ref):
+    # error-feedback variant: emit Q(g) and the residual g - Q(g) in the
+    # SAME pass — one read of g, two writes, no second traversal for the
+    # residual update.
+    g = g_ref[...].astype(jnp.float32)
+    lam = lam_ref[0, 0]
+    p = jnp.minimum(lam * jnp.abs(g), 1.0)
+    z = u_ref[...] < p
+    safe_p = jnp.where(p > 0, p, 1.0)
+    q = jnp.where(z, g / safe_p, 0.0).astype(out_ref.dtype)
+    out_ref[...] = q
+    # subtract the value the wire actually carries (post dtype rounding),
+    # so the residual accounts for quantization of the kept values too
+    res_ref[...] = (g - q.astype(jnp.float32)).astype(res_ref.dtype)
+
+
 def _sparsify_prng_body(g_ref, lam_ref, seed_ref, out_ref):
     # independent stream per tile: fold the tile coordinates into the seed
     i, j = pl.program_id(0), pl.program_id(1)
@@ -70,6 +86,34 @@ def sparsify_2d(g: jax.Array, u: jax.Array, lam: jax.Array,
         out_shape=jax.ShapeDtypeStruct((r, c), g.dtype),
         interpret=interpret,
         name="gspar_sparsify",
+    )(g, u, lam2)
+
+
+def sparsify_ef_2d(g: jax.Array, u: jax.Array, lam: jax.Array,
+                   interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Fused Q(g) + residual: returns (Q, g - Q), both [R, C] in g's dtype.
+    The error-feedback twin of ``sparsify_2d`` — the residual subtraction
+    happens in the same VMEM tile as the sample, so the EF update costs one
+    extra HBM write instead of a separate read-subtract-write pass."""
+    r, c = g.shape
+    grid = (r // BLOCK_R, c // BLOCK_C)
+    lam2 = jnp.asarray(lam, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _sparsify_ef_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((r, c), g.dtype)] * 2,
+        interpret=interpret,
+        name="gspar_sparsify_ef",
     )(g, u, lam2)
 
 

@@ -141,13 +141,44 @@ def gspar_sparse(g: jax.Array, u: jax.Array, k_cap: int, rho: float = 0.1,
     lam = greedy_lambda(l1, mx, rho, n, num_iters,
                         tail_fn=_kernel_tail_fn(g2d, n, interpret))
     flat = K.sparsify_2d(g2d, u2d, lam, interpret=interpret).reshape(-1)[:n]
+    vals, idx, nnz = _counting_compact(flat, k_cap)
+    return vals, idx, nnz, lam
+
+
+def _counting_compact(flat: jax.Array, k_cap: int):
+    """Sort-free compaction: first k_cap nonzeros in coordinate order."""
     nz = flat != 0
     nnz = jnp.sum(nz.astype(jnp.int32))
     (idx,) = jnp.nonzero(nz, size=k_cap, fill_value=0)
     idx = idx.astype(jnp.int32)
     valid = jnp.arange(k_cap, dtype=jnp.int32) < jnp.minimum(nnz, k_cap)
     vals = jnp.where(valid, flat[idx], jnp.zeros((), flat.dtype))
-    return vals, idx, nnz, lam
+    return vals, idx, nnz
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rho", "num_iters", "k_cap", "interpret"))
+def gspar_sparse_ef(g: jax.Array, u: jax.Array, k_cap: int, rho: float = 0.1,
+                    num_iters: int = 2, interpret: bool = False):
+    """Error-feedback twin of ``gspar_sparse``: the fused kernel subtracts
+    the kept (amplified, dtype-rounded) values from the target in the same
+    pass that samples them, emitting ``(values[k_cap], idx[k_cap], nnz,
+    lam, residual[d])`` with ``residual = g - Q(g)`` in g's dtype. On
+    overflow (nnz > k_cap) the dropped survivors remain *subtracted* from
+    the residual — they were sampled, just not transmitted — matching the
+    dense-wire semantics of ``target - Q(target)``; the reference sparse
+    backend instead re-carries their error (residual = target -
+    transmitted). The two agree exactly at zero overflow, which the
+    ``capacity_for`` sizing guarantees in configured operation."""
+    g2d, n, _, _ = _pad_2d(g.reshape(-1))
+    u2d, _, _, _ = _pad_2d(u.reshape(-1).astype(jnp.float32))
+    l1, _, mx = K.stats_2d(g2d, interpret=interpret)
+    lam = greedy_lambda(l1, mx, rho, n, num_iters,
+                        tail_fn=_kernel_tail_fn(g2d, n, interpret))
+    q2d, res2d = K.sparsify_ef_2d(g2d, u2d, lam, interpret=interpret)
+    flat = q2d.reshape(-1)[:n]
+    vals, idx, nnz = _counting_compact(flat, k_cap)
+    return vals, idx, nnz, lam, res2d.reshape(-1)[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("rho", "num_iters", "interpret"))

@@ -23,7 +23,7 @@ from repro.dist import sharding as shd
 from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.models import transformer as tf
 from repro.models.common import split_params
-from repro.optim.optimizers import adam, sgd
+from repro.optim.optimizers import adam, init_feedback, sgd
 from repro.train import step as step_lib
 
 
@@ -41,6 +41,9 @@ def main(argv=None):
     ap.add_argument("--rho", type=float, default=0.05)
     ap.add_argument("--wire", default="dense",
                     choices=["dense", "gather", "packed"])
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry the per-worker compression residual "
+                         "(memory: one params-sized buffer per worker)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "reference", "pallas"],
                     help="compression backend (pallas = fused kernels)")
@@ -81,7 +84,14 @@ def main(argv=None):
     opt_state = opt.init(params)
     comp = CompressionConfig(name=args.compressor, rho=args.rho,
                              wire=args.wire, backend=args.backend,
+                             error_feedback=args.error_feedback,
                              min_leaf_size=1024)
+    ef_state = None
+    if comp.error_feedback:
+        # compressed mode: stacked per-worker residual; fsdp: params-shaped
+        ef_state = (init_feedback(params, step_lib.mesh_workers(mesh,
+                                                                multi_pod))
+                    if mode == "compressed" else init_feedback(params))
     with jax.set_mesh(mesh):
         if mode == "compressed":
             train_step = jax.jit(step_lib.make_compressed_train_step(
@@ -95,8 +105,12 @@ def main(argv=None):
         for step_i in range(args.steps):
             key, k_data, k_q = jax.random.split(key, 3)
             batch = token_batch(k_data, cfg.vocab, args.batch, args.seq)
-            params, opt_state, metrics = train_step(params, opt_state, batch,
-                                                    k_q)
+            if ef_state is not None:
+                params, opt_state, ef_state, metrics = train_step(
+                    params, opt_state, ef_state, batch, k_q)
+            else:
+                params, opt_state, metrics = train_step(params, opt_state,
+                                                        batch, k_q)
             if step_i % args.log_every == 0 or step_i == args.steps - 1:
                 m = {k: float(v) for k, v in metrics.items()}
                 msg = (f"step {step_i:>5} loss {m['loss']:.4f}")
@@ -111,8 +125,14 @@ def main(argv=None):
               f"({args.steps / dt:.2f} steps/s)")
 
     if args.checkpoint:
-        checkpoint.save(args.checkpoint, {"params": params, "opt": opt_state},
-                        extra={"arch": args.arch, "steps": args.steps})
+        tree = {"params": params, "opt": opt_state}
+        if ef_state is not None:
+            # the EF residual is training state: restarting without it
+            # re-biases the first compressed step after restore
+            tree["ef"] = ef_state
+        checkpoint.save(args.checkpoint, tree,
+                        extra={"arch": args.arch, "steps": args.steps,
+                               "error_feedback": bool(ef_state is not None)})
         print(f"checkpoint -> {args.checkpoint}")
     return 0
 

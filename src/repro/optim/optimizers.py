@@ -22,6 +22,41 @@ class Optimizer(NamedTuple):
     update: Callable[..., tuple[Any, Any]]   # (grads, state, params, **kw) -> (new_params, new_state)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FeedbackState:
+    """Per-worker error-feedback residual (Seide et al. 2014; Alistarh et al.
+    2018): the accumulated difference between what each worker wanted to send
+    and what the compressed wire actually carried. Carried by the train step
+    alongside the optimizer state, and checkpointed with it — dropping it on
+    restart silently re-biases the very first compressed step.
+
+    ``residual`` has the same tree structure as the parameters. In the
+    compressed (Algorithm 1) train step every leaf carries a leading
+    per-worker axis, sharded exactly like the stacked gradients that cross
+    the sync shard_map boundary; in the fsdp step leaves are params-shaped.
+    Memory cost: one params-sized f32/bf16 buffer per worker.
+    """
+    residual: Any
+
+
+def init_feedback(params: Any, num_workers: int | None = None) -> FeedbackState:
+    """Zero residual state.
+
+    ``num_workers=None`` -> fsdp layout (leaves shaped like params).
+    ``num_workers=W``    -> compressed-step layout: each leaf gains a leading
+    worker axis of global size W (the product of the manual data/pod mesh
+    axes), matching the stacked per-worker gradients entering the sync
+    region.
+    """
+    if num_workers is None:
+        return FeedbackState(residual=jax.tree.map(jnp.zeros_like, params))
+    if num_workers < 1:
+        raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+    return FeedbackState(residual=jax.tree.map(
+        lambda p: jnp.zeros((num_workers,) + tuple(p.shape), p.dtype), params))
+
+
 def _tree_cast(tree, dtype):
     return jax.tree.map(lambda x: x.astype(dtype), tree)
 

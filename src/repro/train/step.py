@@ -32,7 +32,7 @@ from repro.core.api import CompressionConfig, compress_tree
 from repro.dist import sharding as shd
 from repro.models import transformer
 from repro.models.common import split_params
-from repro.optim.optimizers import Optimizer
+from repro.optim.optimizers import FeedbackState, Optimizer, init_feedback
 from repro.train.loss import lm_loss, shift_targets
 
 
@@ -57,6 +57,32 @@ def _strip_manual(rules: dict, manual: tuple[str, ...]) -> dict:
     return out
 
 
+def mesh_workers(mesh, multi_pod: bool = False) -> int:
+    """Global worker count of the compressed step: the product of the manual
+    data (and pod) mesh axes — the leading-axis size of the stacked
+    per-worker gradient / FeedbackState layout."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes["data"]
+    if multi_pod:
+        n *= sizes["pod"]
+    return n
+
+
+def init_compressed_feedback(cfg: transformer.ModelConfig,
+                             comp: CompressionConfig, mesh,
+                             multi_pod: bool = False) -> FeedbackState:
+    """Zero FeedbackState in the compressed step's stacked per-worker
+    layout (leading axis = mesh_workers(mesh)), structure matching the
+    model's gradient tree."""
+    if not comp.error_feedback:
+        raise ValueError("init_compressed_feedback with error_feedback=False")
+    # shapes only — never materialize (or randomly initialize) the params
+    param_sds = jax.eval_shape(lambda k: transformer.init_model(k, cfg),
+                               jax.random.key(0))
+    vals, _ = split_params(param_sds)
+    return init_feedback(vals, num_workers=mesh_workers(mesh, multi_pod))
+
+
 def make_compressed_train_step(cfg: transformer.ModelConfig,
                                comp: CompressionConfig,
                                opt: Optimizer,
@@ -67,6 +93,16 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                                shard_local_sync: bool = True) -> Callable:
     """Algorithm 1 as one jittable step: (params, opt_state, batch, key) ->
     (params, opt_state, metrics).
+
+    With ``comp.error_feedback`` the step additionally carries the
+    per-worker residual: (params, opt_state, ef_state, batch, key) ->
+    (params, opt_state, ef_state, metrics), where ``ef_state`` is a
+    FeedbackState whose leaves live in the same stacked per-worker layout as
+    the gradients crossing the sync boundary (build one with
+    ``init_compressed_feedback``). The residual rides the same shard_map
+    in/out specs as the stacked grads, so it survives the manual-axis
+    boundary, scan-over-layers stacking, and checkpointing like any other
+    state pytree.
 
     shard_local_sync: compress each tensor-parallel shard's gradient slice
     locally (nested shard_map over the model axis). Without it the top_k /
@@ -126,14 +162,9 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
         axis_names=set(manual), check_vma=False)
 
     sync_axes = set(manual) | ({"model"} if shard_local_sync else set())
+    ef = comp.error_feedback
 
-    def sync_fn(grads_stacked, key):
-        grads = jax.tree.map(lambda g: g[0], grads_stacked)
-        for a in sorted(sync_axes):
-            key = jax.random.fold_in(key, jax.lax.axis_index(a))
-        synced, stats = sync_tree(comp, key, grads, data_axis="data",
-                                  pod_axis=pod_axis, stacked=stacked,
-                                  fold_worker_key=False)
+    def _reduce_stats(stats):
         if shard_local_sync:
             # each model shard sends its own message: totals sum, ratios avg
             stats = type(stats)(
@@ -145,8 +176,32 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                 density=jax.lax.pmean(stats.density, "model"),
                 var_ratio=jax.lax.pmean(stats.var_ratio, "model"),
                 overflow=jax.lax.psum(stats.overflow, "model"))
-        stats = jax.tree.map(lambda s: jax.lax.pmean(s, manual), stats)
-        return synced, stats
+        return jax.tree.map(lambda s: jax.lax.pmean(s, manual), stats)
+
+    def _fold_sync_key(key):
+        for a in sorted(sync_axes):
+            key = jax.random.fold_in(key, jax.lax.axis_index(a))
+        return key
+
+    def sync_fn(grads_stacked, key):
+        grads = jax.tree.map(lambda g: g[0], grads_stacked)
+        synced, _, stats = sync_tree(comp, _fold_sync_key(key), grads,
+                                     data_axis="data", pod_axis=pod_axis,
+                                     stacked=stacked, fold_worker_key=False)
+        return synced, _reduce_stats(stats)
+
+    def sync_fn_ef(grads_stacked, res_stacked, key):
+        # the residual enters/leaves in the same stacked per-worker layout
+        # as the grads, so it shards identically across the manual axes
+        grads = jax.tree.map(lambda g: g[0], grads_stacked)
+        res = jax.tree.map(lambda r: r[0], res_stacked)
+        synced, new_res, stats = sync_tree(comp, _fold_sync_key(key), grads,
+                                           data_axis="data",
+                                           pod_axis=pod_axis, stacked=stacked,
+                                           fold_worker_key=False,
+                                           residual=res)
+        return (synced, jax.tree.map(lambda r: r[None], new_res),
+                _reduce_stats(stats))
 
     sync_in_specs = (stacked_specs if shard_local_sync
                      else jax.tree.map(lambda s: _spec_with(worker_prefix, P()),
@@ -155,14 +210,19 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
     sync_out_specs = (grad_specs if shard_local_sync
                       else jax.tree.map(lambda s: P(), grad_specs,
                                         is_leaf=lambda t: isinstance(t, P)))
-    sync_sharded = jax.shard_map(
-        sync_fn, mesh=mesh, in_specs=(sync_in_specs, P()),
-        out_specs=(sync_out_specs, P()),
-        axis_names=sync_axes, check_vma=False)
+    if ef:
+        sync_sharded = jax.shard_map(
+            sync_fn_ef, mesh=mesh,
+            in_specs=(sync_in_specs, sync_in_specs, P()),
+            out_specs=(sync_out_specs, sync_in_specs, P()),
+            axis_names=sync_axes, check_vma=False)
+    else:
+        sync_sharded = jax.shard_map(
+            sync_fn, mesh=mesh, in_specs=(sync_in_specs, P()),
+            out_specs=(sync_out_specs, P()),
+            axis_names=sync_axes, check_vma=False)
 
-    def train_step(params, opt_state, batch, key):
-        loss, grads_stacked = grad_sharded(params, batch)
-        grads, stats = sync_sharded(grads_stacked, key)
+    def _finish(loss, grads, stats, opt_state, params):
         var_scale = jnp.maximum(stats.var_ratio, 1.0) if var_adaptive_lr else 1.0
         new_params, new_opt = opt.update(grads, opt_state, params,
                                          var_scale=var_scale)
@@ -173,7 +233,20 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                    "overflow": stats.overflow, "dense_bits": stats.dense_bits}
         return new_params, new_opt, metrics
 
-    return train_step
+    def train_step(params, opt_state, batch, key):
+        loss, grads_stacked = grad_sharded(params, batch)
+        grads, stats = sync_sharded(grads_stacked, key)
+        return _finish(loss, grads, stats, opt_state, params)
+
+    def train_step_ef(params, opt_state, ef_state, batch, key):
+        loss, grads_stacked = grad_sharded(params, batch)
+        grads, new_res, stats = sync_sharded(grads_stacked,
+                                             ef_state.residual, key)
+        new_params, new_opt, metrics = _finish(loss, grads, stats,
+                                               opt_state, params)
+        return new_params, new_opt, FeedbackState(residual=new_res), metrics
+
+    return train_step_ef if ef else train_step
 
 
 def make_fsdp_train_step(cfg: transformer.ModelConfig,
@@ -181,7 +254,13 @@ def make_fsdp_train_step(cfg: transformer.ModelConfig,
                          opt: Optimizer,
                          mesh,
                          rules: dict) -> Callable:
-    """GSPMD baseline; optional Q() on the averaged gradient (Alg. 1 step 7)."""
+    """GSPMD baseline; optional Q() on the averaged gradient (Alg. 1 step 7).
+
+    With ``comp.error_feedback`` the step carries a FeedbackState with
+    params-shaped leaves (``init_feedback(params)``) and the signature gains
+    an ``ef_state`` argument/result, mirroring the compressed step. The
+    residual here is of the *averaged* gradient (there is one logical
+    compression per step), so it shards like the params under GSPMD."""
     loss_fn = make_loss_fn(cfg)
     param_tree = jax.eval_shape(lambda k: transformer.init_model(k, cfg),
                                 jax.random.key(0))
@@ -190,10 +269,14 @@ def make_fsdp_train_step(cfg: transformer.ModelConfig,
         lambda ax: len(ax) > 0 and ax[0] == "layers", param_axes,
         is_leaf=lambda t: isinstance(t, tuple) and all(
             isinstance(e, (str, type(None))) for e in t))
+    ef = comp is not None and comp.name != "none" and comp.error_feedback
+
+    def _grads(params, batch):
+        with shd.activation_sharding(rules, mesh):
+            return jax.value_and_grad(loss_fn)(params, batch)
 
     def train_step(params, opt_state, batch, key):
-        with shd.activation_sharding(rules, mesh):
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss, grads = _grads(params, batch)
         metrics = {"loss": loss}
         if comp is not None and comp.name != "none":
             q_tree, _, stats = compress_tree(comp, key, grads, stacked=stacked)
@@ -203,7 +286,18 @@ def make_fsdp_train_step(cfg: transformer.ModelConfig,
         new_params, new_opt = opt.update(grads, opt_state, params)
         return new_params, new_opt, metrics
 
-    return train_step
+    def train_step_ef(params, opt_state, ef_state, batch, key):
+        loss, grads = _grads(params, batch)
+        q_tree, new_res, stats = compress_tree(comp, key, grads,
+                                               residual=ef_state.residual,
+                                               stacked=stacked)
+        metrics = {"loss": loss, "bits": stats.bits, "density": stats.density,
+                   "var_ratio": stats.var_ratio}
+        new_params, new_opt = opt.update(q_tree, opt_state, params)
+        return (new_params, new_opt, FeedbackState(residual=new_res),
+                metrics)
+
+    return train_step_ef if ef else train_step
 
 
 # ---------------------------------------------------------------------------

@@ -92,7 +92,7 @@ class TestSingleSelection:
         g = {"w": _grad(2, (1 << 14,))}
 
         def compress(key, grads):
-            items, _, _ = compress_tree_sparse(cfg, key, grads)
+            items, _, _, _ = compress_tree_sparse(cfg, key, grads)
             (kind, sg), = items
             return sg.values, sg.idx
 
@@ -115,7 +115,7 @@ class TestSingleSelection:
         g = {"w": _grad(3, (1 << 14,))}
 
         def compress(key, grads):
-            items, _, _ = compress_tree_sparse(cfg, key, grads)
+            items, _, _, _ = compress_tree_sparse(cfg, key, grads)
             (kind, sg), = items
             return sg.values, sg.idx
 
@@ -194,7 +194,7 @@ class TestSolverParity:
                                 wire="gather", min_leaf_size=8,
                                 capacity_slack=4.0, backend="reference")
         key = jax.random.key(3)
-        items, _, _ = compress_tree_sparse(cfg, key, {"g": g},
+        items, _, _, _ = compress_tree_sparse(cfg, key, {"g": g},
                                            stacked={"g": True})
         (_, sg), = items
         assert sg.values.shape[0] == layers
@@ -215,10 +215,10 @@ class TestSolverParity:
         key = jax.random.key(4)
         base = dict(name="gspar", rho=0.05, wire="gather", min_leaf_size=8,
                     capacity_slack=4.0)
-        ref_items, _, _ = compress_tree_sparse(
+        ref_items, _, _, _ = compress_tree_sparse(
             CompressionConfig(**base, backend="reference"), key, {"g": g},
             stacked={"g": True})
-        pal_items, _, _ = compress_tree_sparse(
+        pal_items, _, _, _ = compress_tree_sparse(
             CompressionConfig(**base, backend="pallas"), key, {"g": g},
             stacked={"g": True})
         a = ref_items[0][1].densify().astype(jnp.float32)
@@ -248,7 +248,7 @@ class TestPackedWire:
         leaves = jax.tree.leaves(g)
 
         def one_worker(key, grads):
-            items, _, _ = compress_tree_sparse(cfg, key, grads)
+            items, _, _, _ = compress_tree_sparse(cfg, key, grads)
             out, wire, ovf = _bucketed_sync(items, leaves, "data", cfg)
             return out[0], wire
 
