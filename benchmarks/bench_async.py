@@ -41,7 +41,6 @@ def run(quick: bool = False):
     # backend cross-check on the same gradient: the fused pallas path
     # (interpret mode on CPU) must reproduce the reference solver's conflict
     # profile, since both realize the same p = min(lambda |g|, 1).
-    import jax
     from repro.kernels.sparsify import ops as kops
     p_ref = sparsify.greedy_probabilities(g, 0.05, num_iters=4)
     lam = kops.gspar_lambda(g, rho=0.05, num_iters=4, interpret=True)

@@ -3,7 +3,6 @@ rho sweep). Validation: training converges even at aggressive sparsity with
 only a minor loss-vs-step penalty, while communication drops by ~1/rho."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import save_json
 from repro.experiments.cnn import run_cnn

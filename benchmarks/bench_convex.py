@@ -10,8 +10,6 @@ Validation targets (paper claims):
 """
 from __future__ import annotations
 
-import jax
-import numpy as np
 
 from benchmarks.common import save_json, timed_us
 from repro.data.synthetic import logreg_data

@@ -1,4 +1,4 @@
-"""Wire-format / backend benchmark for the unified sparse-wire pipeline.
+"""Wire-format / backend / scheme benchmark for the sparse-wire pipeline.
 
 Measures, on a realistic mixed leaf set (one 1M-coordinate matrix, one
 scan-over-layers stack, a handful of tiny vectors):
@@ -6,17 +6,34 @@ scan-over-layers stack, a handful of tiny vectors):
   * wall-clock per step of the full compress -> exchange pipeline for every
     (backend x wire) combination, run end-to-end inside a single-device
     shard_map so the collectives lower and the bucketing cost is real;
+  * the same pipeline for every registered selector∘codec composition
+    (gspar+qsgd8, terngrad, ... ) on its preferred wires — bytes moved,
+    coding-model bits, density;
   * wire bytes actually moved per step (SyncStats accounting), the coding-
     model message bits, and realized density;
   * bit-consistency of the pallas backend (interpret mode on CPU) against
     the pure-jnp reference of the same fused pipeline on the pregenerated-
     uniforms path — asserted, not just reported.
+
+``python -m benchmarks.bench_wire --json`` additionally writes the full
+payload to ``BENCH_wire.json`` at the repo root (the CI perf artifact);
+``--full`` switches from the dryrun-sized leaf set to the 1M-coordinate one.
 """
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
 from benchmarks.common import save_json, timed_us
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the composition matrix the refactor unlocked: each entry is measured on
+# the dense + gather wires with the reference backend
+COMPOSED_SCHEMES = ("gspar", "gspar+bf16", "gspar+qsgd8", "topk+ternary",
+                    "terngrad", "qsgd")
 
 
 def _leaf_set(quick: bool):
@@ -35,7 +52,7 @@ def _leaf_set(quick: bool):
     return grads, stacked
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, return_payload: bool = False):
     import repro  # noqa: F401  (jax compat shims)
     import jax
     import jax.numpy as jnp
@@ -100,6 +117,45 @@ def run(quick: bool = False):
                              f"bits={rec['bits']:.3g};"
                              f"density={rec['density']:.4f}"))
 
+    # composed-scheme matrix: every selector∘codec composition on the
+    # dense and gather wires (reference backend) — the bytes/bits shape of
+    # the compression zoo after the composable-compression refactor.
+    for scheme in COMPOSED_SCHEMES:
+        for wire in ("dense", "gather"):
+            cfg = CompressionConfig(name=scheme, rho=rho, wire=wire,
+                                    min_leaf_size=256, backend="reference")
+
+            def step(key, g):
+                synced, _, stats = sync_tree(cfg, key, g, data_axis="data")
+                return synced, stats
+            with jax.set_mesh(mesh):
+                fn = jax.jit(jax.shard_map(
+                    step, mesh=mesh, in_specs=(P(), P()),
+                    out_specs=(P(), P()), axis_names={"data"},
+                    check_vma=False))
+                out = fn(jax.random.key(7), grads)
+                stats = out[-1]
+                jax.block_until_ready(out[0])
+                us = timed_us(lambda: jax.block_until_ready(
+                    fn(jax.random.key(7), grads)[0]),
+                    iters=2 if quick else 5)
+            rec = {
+                "us_per_step": us,
+                "wire_bytes": float(stats.wire_bytes),
+                "dense_bytes": float(dense_bytes),
+                "bits": float(stats.bits),
+                "dense_bits": float(stats.dense_bits),
+                "density": float(stats.density),
+                "overflow": float(stats.overflow),
+            }
+            tag = f"scheme:{scheme}:{wire}"
+            payload[tag] = rec
+            rows.append((f"wire:{tag}", us,
+                         f"wire_bytes={rec['wire_bytes']:.3g};"
+                         f"bits={rec['bits']:.3g}"
+                         f"(dense={rec['dense_bits']:.3g});"
+                         f"density={rec['density']:.4f}"))
+
     # solver calibration: expected density (sum of sampling probabilities,
     # SparseGrad.p_sum) vs realized nnz over the leaf set — a persistent gap
     # flags a miscalibrated lambda.
@@ -148,9 +204,24 @@ def run(quick: bool = False):
                  f"pallas_interpret_vs_reference_exact={exact}"))
 
     save_json("wire", payload)
-    return rows
+    return (rows, payload) if return_payload else rows
 
 
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import emit
-    emit(run(quick=True))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_wire.json at the repo root")
+    ap.add_argument("--full", action="store_true",
+                    help="1M-coordinate leaf set instead of dryrun-sized")
+    args = ap.parse_args()
+    bench_rows, bench_payload = run(quick=not args.full,
+                                    return_payload=True)
+    emit(bench_rows)
+    if args.json:
+        path = os.path.join(REPO_ROOT, "BENCH_wire.json")
+        with open(path, "w") as f:
+            json.dump(bench_payload, f, indent=2, default=float)
+        print(f"wrote {path}")

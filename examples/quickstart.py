@@ -44,10 +44,13 @@ q = sparsify.sparsify(jax.random.key(0), g, p_opt)
 print(f"  sampled Q(g): nnz={int(jnp.sum(jnp.abs(q) > 0))} "
       f"(E={float(jnp.sum(p_opt)):.0f}), unbiased per coordinate")
 
-# the rest of the zoo
+# the rest of the zoo — every name is a selector ∘ codec composition
+# (qsgd = identity∘qsgd4, terngrad = bernoulli∘ternary), and arbitrary
+# compositions like the Qsparse-style gspar+qsgd8 work the same way
 print("\ncompressor zoo (density / var ratio / bits):")
-for name in ("gspar", "unisp", "topk", "qsgd", "terngrad", "none"):
+for name in ("gspar", "unisp", "topk", "qsgd", "terngrad", "none",
+             "gspar+qsgd8", "topk+ternary"):
     cg = make_compressor(name)(jax.random.key(1), g)
     nnz = float(jnp.mean(jnp.abs(cg.q) > 0))
-    print(f"  {name:<9} {nnz:>7.4f}  x{float(cg.var_ratio):>6.3f} "
+    print(f"  {name:<12} {nnz:>7.4f}  x{float(cg.var_ratio):>6.3f} "
           f"{float(cg.bits):>12.0f}")

@@ -10,7 +10,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-import sys
 
 DRY = "results/dryrun"
 EXP = "results/experiments"

@@ -16,6 +16,31 @@ import jax
 import jax.numpy as jnp
 
 
+# A bucket concatenates every leaf of a wire-dtype group into one int32
+# coordinate space; beyond this many coordinates the offsets wrap negative
+# and the scatter-add silently drops (mode="drop") every wrapped leaf.
+INT32_COORD_LIMIT = 2**31 - 1
+
+
+def check_bucket_coords(total_coords: int, n_leaves: int) -> None:
+    """Guard the int32 coordinate space of one bucketed collective.
+
+    ``total_coords`` is a static (trace-time) Python int — the sum of leaf
+    sizes in one wire-dtype bucket — so this raises at trace/compile time,
+    never on device.
+    """
+    if total_coords > INT32_COORD_LIMIT:
+        raise ValueError(
+            f"sparse-wire bucket would span {total_coords} coordinates "
+            f"across {n_leaves} leaves, which exceeds the int32 index "
+            f"limit ({INT32_COORD_LIMIT}); the concatenated offsets would "
+            "wrap negative and the scatter-add would silently drop every "
+            "wrapped leaf. Chunk the tree into sub-2^31-coordinate buckets: "
+            "split the model into multiple sync_tree calls (e.g. per "
+            "parameter group), or lower min_leaf_size pressure by sharding "
+            "giant leaves over the model axis before compression.")
+
+
 def capacity_for(d: int, rho: float, slack: float = 1.25) -> int:
     """Static message capacity for a leaf of size d at target density rho."""
     k = (int(slack * rho * d) + 127) // 128 * 128

@@ -12,10 +12,13 @@ Wire formats (CompressionConfig.wire):
             (values, idx) buffers directly; one all_gather + local
             scatter-add. The HLO collective shrinks to 2*k_cap*M words: this
             is the TPU-native realization of the paper's sparse All-Reduce.
-  packed -- like gather, but values travel as bf16 (and the Q_B tail of the
-            paper's coding would be sign+lambda; bf16 is the conservative
-            stand-in that keeps one buffer). A backend-independent wire
-            transform applied at bucketing time. Halves collective bytes.
+  packed -- gather with the value codec upgraded to bf16 when the config
+            names none (the pre-refactor behavior). Halves value bytes.
+
+The value buffers travel *codec-encoded* (repro.core.codecs): bf16 halves,
+int8 ternary signs or int8/int16 qsgd levels shrink them further, plus one
+f32 scale per message for the integer codecs (gathered alongside, decoded
+locally after the collective). Buckets are keyed by the codec wire dtype.
 
 The sparse wires are *bucketed*: every leaf's buffers are offset into one
 concatenated coordinate space and exchanged with a single all_gather pair
@@ -80,9 +83,22 @@ def _sync_leaves_dense(q_tree: Any, axis: Axis):
     return synced, wire
 
 
+def _encode_det(codec, vals: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Keyless (round-to-nearest) codec encode of one compact value buffer:
+    the pod-stage re-compaction is deterministic by design (like its top-k
+    selection), so the stochastic codecs round deterministically here. Any
+    rounding bias lands in ``_compaction_drop`` and is re-carried by EF."""
+    scale = codec.scale(vals)
+    return codec.encode(vals, scale, None), scale
+
+
 def _compact_items(cfg: CompressionConfig, leaves: list, stk_leaves: list):
     """Fixed-capacity compaction of an already-dense (e.g. pod-averaged)
-    tree: the single nonzero-selection of the inter-pod stage."""
+    tree: the single nonzero-selection of the inter-pod stage. Values are
+    re-encoded into the configured codec's wire representation so the
+    inter-pod collective moves the same dtype as the intra-pod one."""
+    scheme = cfg.scheme()
+    codec = scheme.codec
     items = []
     for leaf, stk in zip(leaves, stk_leaves):
         if leaf.size < cfg.min_leaf_size:
@@ -92,38 +108,36 @@ def _compact_items(cfg: CompressionConfig, leaves: list, stk_leaves: list):
         if stk and leaf.ndim >= 2 and leaf.shape[0] > 1:
             layers = leaf.shape[0]
             d_l = leaf.size // layers
-            k_cap = compaction.capacity_for(d_l, cfg.rho, cfg.capacity_slack)
+            k_cap = scheme.selector.capacity(d_l, cfg.capacity_slack)
             vals, idx, nnz = jax.vmap(
                 lambda row: compaction.compact(row, k_cap))(
                     leaf.reshape(layers, d_l))
+            vals, scale = jax.vmap(lambda v: _encode_det(codec, v))(vals)
             items.append(("sparse", SparseGrad(
                 values=vals, idx=idx, nnz=nnz,
                 p_sum=nnz.astype(jnp.float32),   # deterministic: E[nnz]=nnz
                 bits=jnp.zeros((layers,), jnp.float32),
                 var_ratio=jnp.zeros((layers,), jnp.float32),
-                d=d_l, shape=(d_l,))))
+                scale=scale, d=d_l, shape=(d_l,), codec=codec.name)))
             continue
-        k_cap = compaction.capacity_for(leaf.size, cfg.rho,
-                                        cfg.capacity_slack)
+        k_cap = scheme.selector.capacity(leaf.size, cfg.capacity_slack)
         vals, idx, nnz = compaction.compact(leaf, k_cap)
+        vals, scale = _encode_det(codec, vals)
         items.append(("sparse", SparseGrad(
             values=vals, idx=idx, nnz=nnz, p_sum=nnz.astype(jnp.float32),
-            bits=zero, var_ratio=zero, d=leaf.size,
-            shape=tuple(leaf.shape))))
+            bits=zero, var_ratio=zero, scale=scale, d=leaf.size,
+            shape=tuple(leaf.shape), codec=codec.name)))
     return items
 
 
 def _compaction_drop(cfg: CompressionConfig, leaf: jax.Array,
                      sg: SparseGrad) -> jax.Array:
     """What the fixed-capacity pod message failed to carry of ``leaf``:
-    leaf minus the scatter of the transmitted buffers (values rounded to
-    the wire dtype on 'packed'). Nonzero exactly on compaction overflow —
-    the pod-union of M workers' coordinates routinely exceeds one worker's
-    k_cap — and on bf16 rounding of kept values."""
-    vals = sg.values
-    if cfg.wire == "packed":
-        vals = vals.astype(jnp.bfloat16)
-    vals = vals.astype(jnp.float32)
+    leaf minus the scatter of the codec-decoded transmitted buffers.
+    Nonzero exactly on compaction overflow — the pod-union of M workers'
+    coordinates routinely exceeds one worker's k_cap — and on codec
+    rounding of kept values (bf16, qsgd levels, ternary)."""
+    vals = sg.decode_values()
     if sg.values.ndim == 2:                  # stacked: per-layer scatter
         sent = jax.vmap(lambda v, i: compaction.scatter(v, i, sg.d))(
             vals, sg.idx).reshape(-1)
@@ -139,12 +153,17 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
 
     Sparse leaves are offset into a single concatenated coordinate space:
     one all_gather for values, one for indices, one scatter-add back into a
-    flat buffer covering the whole tree. Dense-passthrough leaves share one
-    psum. Indices are int32 — a single bucket therefore addresses up to 2^31
-    coordinates (~8.6 GB of f32 gradient per dtype group); beyond that the
-    bucket would need chunking.
+    flat buffer covering the whole tree. Values travel codec-encoded (the
+    backend already emitted the wire representation); codecs with a
+    per-message scale gather the (tiny) scale vector alongside and decode
+    locally after the collective, per (worker, leaf, layer) slot. Dense-
+    passthrough leaves share one psum. Indices are int32 — a single bucket
+    therefore addresses up to 2^31 coordinates (~8.6 GB of f32 gradient per
+    dtype group); beyond that ``check_bucket_coords`` raises at trace time
+    with chunking advice instead of letting the offsets wrap.
     """
     m = _axis_size(axis)
+    codec = cfg.scheme().codec
     out: list = [None] * len(items)
     wire = 0.0
     overflow = jnp.asarray(0, jnp.int32)
@@ -155,9 +174,8 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
         if kind == "dense":
             dense_ids.append(i)
         else:
-            wdt = (jnp.dtype(jnp.bfloat16) if cfg.wire == "packed"
-                   else jnp.dtype(payload.values.dtype))
-            sparse_groups.setdefault(wdt, []).append(i)
+            sparse_groups.setdefault(jnp.dtype(payload.values.dtype),
+                                     []).append(i)
 
     if dense_ids:
         # one f32 psum for all tiny leaves: f32 keeps the mean exact for
@@ -175,29 +193,56 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
         wire += float(flat.size * 4)
 
     for wdt, ids in sorted(sparse_groups.items(), key=lambda kv: str(kv[0])):
-        vals_parts, idx_parts = [], []
+        # guard the int32 coordinate space BEFORE materializing any offset
+        # as an int32 literal (a wrapped offset would corrupt silently)
+        compaction.check_bucket_coords(
+            sum((items[i][1].values.shape[0] if items[i][1].values.ndim == 2
+                 else 1) * items[i][1].d for i in ids), len(ids))
+        vals_parts, idx_parts, scale_parts, slot_parts = [], [], [], []
         offset = 0
+        s_off = 0
         for i in ids:
             sg = items[i][1]
+            k = sg.values.shape[-1]
             if sg.values.ndim == 2:          # stacked: [L, k] per-layer buffers
                 layers = sg.values.shape[0]
                 gidx = sg.idx + (jnp.arange(layers, dtype=jnp.int32)
                                  * sg.d)[:, None]
                 block = layers * sg.d
+                n_scales = layers
             else:
                 gidx = sg.idx
                 block = sg.d
+                n_scales = 1
+            if codec.has_scale:
+                slot_parts.append(
+                    jnp.repeat(jnp.arange(n_scales, dtype=jnp.int32), k)
+                    + jnp.int32(s_off))
+                scale_parts.append(jnp.asarray(sg.scale, jnp.float32)
+                                   .reshape(-1))
             idx_parts.append((gidx + jnp.int32(offset)).reshape(-1))
-            vals_parts.append(sg.values.reshape(-1).astype(wdt))
+            vals_parts.append(sg.values.reshape(-1))
             offset += block
+            s_off += n_scales
             overflow = overflow + jnp.sum(sg.overflow())
         vals_flat = jnp.concatenate(vals_parts)
         idx_flat = jnp.concatenate(idx_parts)
         gvals = jax.lax.all_gather(vals_flat, axis, tiled=False)  # [m, K]
         gidx = jax.lax.all_gather(idx_flat, axis, tiled=False)
+        if codec.has_scale:
+            # per-message scales ride a third (tiny: one f32 per leaf/layer)
+            # all_gather; each slot decodes with its own worker's scale.
+            scales_flat = jnp.concatenate(scale_parts)           # [S]
+            slot_map = jnp.concatenate(slot_parts)               # [K]
+            gscales = jax.lax.all_gather(scales_flat, axis,
+                                         tiled=False)            # [m, S]
+            decoded = codec.decode(gvals, gscales[:, slot_map])
+            wire += float(scales_flat.size * 4)
+        else:
+            decoded = gvals.astype(jnp.float32)
         dense = jnp.zeros((offset,), jnp.float32)
         dense = dense.at[gidx.reshape(-1)].add(
-            gvals.astype(jnp.float32).reshape(-1), mode="drop") / m
+            decoded.reshape(-1), mode="drop") / m
         off = 0
         for i in ids:
             sg = items[i][1]

@@ -4,6 +4,7 @@ from repro.core.api import (CompressionConfig, TreeStats, compress_leaf,
                             compress_tree, compress_tree_sparse,
                             zeros_like_residual)
 from repro.core.compressors import REGISTRY, CompressedGrad, make_compressor
+from repro.core.schemes import Scheme, make_scheme, parse_composition
 from repro.core.sparse import (Backend, PallasBackend, ReferenceBackend,
                                SparseGrad, resolve_backend)
 from repro.core.sparsify import (closed_form_probabilities, expected_density,
@@ -13,7 +14,8 @@ from repro.core.sparsify import (closed_form_probabilities, expected_density,
 __all__ = [
     "CompressionConfig", "TreeStats", "compress_leaf", "compress_tree",
     "compress_tree_sparse", "zeros_like_residual", "REGISTRY",
-    "CompressedGrad", "make_compressor", "Backend", "PallasBackend",
+    "CompressedGrad", "make_compressor", "Scheme", "make_scheme",
+    "parse_composition", "Backend", "PallasBackend",
     "ReferenceBackend", "SparseGrad", "resolve_backend",
     "closed_form_probabilities", "greedy_probabilities", "uniform_probabilities",
     "expected_density", "variance_inflation",

@@ -12,36 +12,48 @@ state raises — the flag is never a silent no-op.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import schemes as schemes_lib
 from repro.core.compressors import CompressedGrad, make_compressor
-
-
-# Schemes whose messages are ~dense (realized density near 1, or data-
-# dependent and unbounded): the sparse wires size their fixed buffers as
-# k_cap = ceil(slack * rho * d), so these schemes would overflow massively
-# and the sync would silently top-k-truncate the message into a biased
-# average. They must travel on the dense wire.
-DENSE_ONLY_SCHEMES = ("qsgd", "terngrad", "none")
 
 
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
     """Static configuration for the gradient-compression stage.
 
-    Invalid (scheme, wire, error_feedback) combinations raise here, at
-    construction time — never silently degrade at run time.
+    ``name`` is a selector ∘ codec composition: a bare selector
+    (``"gspar"``, ``"unisp"``, ``"topk"``, ``"bernoulli"``,
+    ``"identity"``) defaults to the float codec, ``"selector+codec"``
+    (``"gspar+qsgd8"``, ``"unisp+bf16"``, ``"topk+ternary"``) names both
+    stages, and the legacy monolithic names keep working as aliases:
+    ``"qsgd"`` = identity∘qsgd<qsgd_bits>, ``"terngrad"`` =
+    bernoulli∘ternary, ``"none"`` = identity∘f32.
+
+    Every composition travels on every wire. The old dense-only ban on
+    qsgd/terngrad is replaced by per-composition capacity rules: the sparse
+    wires size their buffers from the *selector* (``k_cap = ceil(slack *
+    rho * d)`` for the rho-targeting selectors; the full ``d`` for
+    bernoulli/identity, whose expected nnz is data-dependent and unbounded
+    — the only static capacity that cannot silently truncate them into a
+    biased average).
+
+    Invalid combinations (e.g. error feedback on the residual-free
+    identity∘f32) raise here, at construction time — never silently
+    degrade at run time.
     """
-    name: str = "gspar"              # registry key: gspar|unisp|topk|qsgd|terngrad|none
+    name: str = "gspar"              # selector[+codec] composition or legacy alias
     rho: float = 0.1                 # target density (gspar-greedy, unisp, topk)
     eps: float = 1.0                 # variance budget (gspar-closed)
     algo: str = "greedy"             # gspar solver: greedy | closed
     num_iters: int = 2               # greedy rescale iterations (paper uses 2)
     qsgd_bits: int = 4
     float_bits: int = 32             # b in the coding model
+    codec: str | None = None         # value codec; None -> from name, else f32
     error_feedback: bool = False     # accumulate compression residual locally
     min_leaf_size: int = 256         # leaves smaller than this are sent dense
     # backend selection (consumed by repro.core.sparse)
@@ -49,27 +61,27 @@ class CompressionConfig:
     kernel_interpret: bool | None = None  # force pallas interpret mode (None=auto)
     # wire/sync settings (consumed by repro.comm)
     wire: str = "dense"              # dense | gather | packed
-    capacity_slack: float = 1.25     # k_cap = ceil(slack * rho * d) for gather wire
+    capacity_slack: float = 1.25     # k_cap slack over the selector's rho target
     resparsify_pods: bool = False    # Alg.1 step 7 -> hierarchical pod-level resync
 
     def __post_init__(self):
         if self.wire not in ("dense", "gather", "packed"):
             raise ValueError(f"unknown wire format {self.wire!r}; "
                              "have ('dense', 'gather', 'packed')")
-        if self.wire != "dense" and self.name in DENSE_ONLY_SCHEMES:
-            raise ValueError(
-                f"unsupported (scheme, wire) pair ({self.name!r}, "
-                f"{self.wire!r}): {self.name} emits ~d nonzeros but the "
-                f"sparse wire sizes its buffers as k_cap = "
-                f"ceil({self.capacity_slack} * rho * d), so the sync would "
-                "silently top-k-truncate the message into a biased average. "
-                "Use wire='dense' for this scheme.")
+        scheme = self.scheme()       # raises on unknown selector/codec/algo
+        if self.name.split("+")[0] == "gspar" \
+                and self.algo not in ("greedy", "closed"):
+            raise ValueError(f"unknown gspar algo {self.algo!r}; "
+                             "have ('greedy', 'closed')")
         if self.error_feedback:
-            if self.name == "none":
+            if scheme.selector.name == "identity" \
+                    and not (scheme.codec.rounds_values
+                             or scheme.codec.integer_coded):
                 raise ValueError(
-                    "unsupported (scheme, error_feedback) pair ('none', "
-                    "True): the identity compressor has zero residual; "
-                    "error feedback would be a silent no-op.")
+                    f"unsupported (scheme, error_feedback) pair "
+                    f"({self.name!r}, True): identity selection with a "
+                    "lossless codec has zero residual; error feedback "
+                    "would be a silent no-op.")
             if self.resparsify_pods:
                 raise ValueError(
                     "unsupported (error_feedback, resparsify_pods) pair "
@@ -77,15 +89,34 @@ class CompressionConfig:
                     "a second compression whose residual is not carried; "
                     "its error would be silently dropped every step.")
 
-    def kwargs(self) -> dict[str, Any]:
-        if self.name == "gspar":
-            return dict(eps=self.eps, algo=self.algo, rho=self.rho,
-                        num_iters=self.num_iters, b=self.float_bits)
-        if self.name in ("unisp", "topk"):
-            return dict(rho=self.rho, b=self.float_bits)
-        if self.name == "qsgd":
-            return dict(bits=self.qsgd_bits)
-        return dict(b=self.float_bits)
+    def scheme(self) -> schemes_lib.Scheme:
+        """The resolved selector ∘ codec composition (cached per config —
+        capacity()/compress paths resolve once per CompressionConfig, not
+        once per leaf).
+
+        The wire may upgrade the codec: ``wire='packed'`` with the default
+        float codec rides bf16 values (the pre-refactor packed transform);
+        an explicitly named codec wins over the upgrade.
+        """
+        return _resolve_scheme(self)
+
+    def capacity(self, d: int) -> int:
+        """Scheme-aware static sparse-wire capacity for a leaf of size d."""
+        return self.scheme().selector.capacity(d, self.capacity_slack)
+
+
+@functools.lru_cache(maxsize=None)
+def _resolve_scheme(cfg: CompressionConfig) -> schemes_lib.Scheme:
+    codec = cfg.codec
+    if cfg.wire == "packed" and codec is None and "+" not in cfg.name:
+        _, legacy_codec = schemes_lib.parse_composition(
+            cfg.name, qsgd_bits=cfg.qsgd_bits)
+        if legacy_codec is None:
+            codec = "bf16"
+    return schemes_lib.make_scheme(
+        cfg.name, codec=codec, rho=cfg.rho, eps=cfg.eps, algo=cfg.algo,
+        num_iters=cfg.num_iters, qsgd_bits=cfg.qsgd_bits,
+        float_bits=cfg.float_bits)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,8 +132,7 @@ jax.tree_util.register_dataclass(TreeStats)
 
 
 def compress_leaf(cfg: CompressionConfig, key: jax.Array, g: jax.Array) -> CompressedGrad:
-    fn = make_compressor(cfg.name, **cfg.kwargs())
-    return fn(key, g)
+    return cfg.scheme().compress(key, g)
 
 
 def _require_residual(cfg: CompressionConfig, residual: Any | None,
@@ -131,6 +161,7 @@ def compress_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
     layer, and it keeps flattened sizes within int32 indexing range.
     """
     _require_residual(cfg, residual, "compress_tree")
+    integer_residual = cfg.scheme().codec.integer_coded
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     res_leaves = (jax.tree_util.tree_flatten(residual)[0]
                   if residual is not None else [None] * len(leaves))
@@ -154,7 +185,25 @@ def compress_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
             cg_bits, cg_var = cg.bits, cg.var_ratio
         q_leaves.append(cg.q)
         if cfg.error_feedback:
-            new_res.append((target - cg.q).astype(leaf.dtype))
+            if integer_residual:
+                # integer codecs (qsgd): the decode ends in an inexact
+                # multiply, which XLA:CPU fma-contracts into `target - q`
+                # or not depending on the surrounding fusion — the dense
+                # and gather wires would then disagree on the residual by
+                # an ulp. A scatter's combiner never contracts with its
+                # update producer, and the sparse wires compute their
+                # residual with exactly this op
+                # (core.sparse._residual_from_buffers), so the identity-
+                # indexed scatter keeps the two bit-identical in every
+                # compilation context. Float codecs are immune (their last
+                # op is a convert or an exact product) and keep the cheap
+                # elementwise subtract.
+                flat_t = target.reshape(-1)
+                res = flat_t.at[jnp.arange(flat_t.shape[0])].add(
+                    -cg.q.reshape(-1).astype(flat_t.dtype))
+                new_res.append(res.reshape(leaf.shape).astype(leaf.dtype))
+            else:
+                new_res.append((target - cg.q).astype(leaf.dtype))
         bits.append(cg_bits)
         dense_bits.append(jnp.asarray(float(leaf.size * cfg.float_bits)))
         nnz.append(jnp.sum((jnp.abs(cg.q.reshape(-1)) > 0).astype(jnp.float32)))
@@ -205,7 +254,6 @@ def compress_tree_sparse(cfg: CompressionConfig, key: jax.Array, grads: Any,
     ``new_residual`` is a grads-structured tree (None without error
     feedback).
     """
-    from repro.comm.compaction import capacity_for
     from repro.core.sparse import resolve_backend
 
     _require_residual(cfg, residual, "compress_tree_sparse")
@@ -233,7 +281,7 @@ def compress_tree_sparse(cfg: CompressionConfig, key: jax.Array, grads: Any,
         elif stk and leaf.ndim >= 2 and leaf.shape[0] > 1:
             layers = leaf.shape[0]
             d_l = leaf.size // layers
-            k_cap = capacity_for(d_l, cfg.rho, cfg.capacity_slack)
+            k_cap = cfg.capacity(d_l)
             lk = jax.random.split(k, layers)
             if ef:
                 sg, res_l = jax.vmap(lambda kk, gg: backend.compress_sparse_ef(
@@ -249,7 +297,7 @@ def compress_tree_sparse(cfg: CompressionConfig, key: jax.Array, grads: Any,
             nnz.append(jnp.sum(sg.nnz.astype(jnp.float32)))
             wvar.append(jnp.mean(sg.var_ratio) * float(leaf.size))
         else:
-            k_cap = capacity_for(leaf.size, cfg.rho, cfg.capacity_slack)
+            k_cap = cfg.capacity(leaf.size)
             if ef:
                 sg, res_leaf = backend.compress_sparse_ef(cfg, k, target,
                                                           k_cap)

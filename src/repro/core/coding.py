@@ -60,6 +60,26 @@ def theorem4_bound_bits(s: int, rho: float, d: int, b: int = 32) -> float:
     return s * (b + logd) + min(rho * s * logd, 2.0 * d) + b
 
 
+def quantized_coding_bits(q: jax.Array, d: int, value_bits: float,
+                          dense_map_bits: float,
+                          header_bits: float) -> jax.Array:
+    """Realized bits for an integer-coded message (codec-aware twin of
+    ``realized_coding_bits``): each transmitted coordinate costs its codec
+    level (``value_bits``) plus a log2 d index, OR the message ships as a
+    dense level map of ``dense_map_bits`` per coordinate — whichever is
+    shorter — plus a per-message header (the codec's scale float).
+
+    Instantiations: identity∘qsgd<N> realizes the paper's QSGD cost model
+    d*N (+norm); bernoulli∘ternary realizes TernGrad's 2d-bit ternary map;
+    gspar+qsgd<N> pays N + log2 d per kept coordinate.
+    """
+    logd = jnp.log2(jnp.asarray(float(d)))
+    nnz = jnp.sum((jnp.abs(q.reshape(-1)) > 0).astype(jnp.float32))
+    listed = nnz * (value_bits + logd)
+    dense_map = float(d) * dense_map_bits
+    return jnp.minimum(listed, dense_map) + header_bits
+
+
 def qsgd_coding_bits(d: int, bits: int) -> float:
     """QSGD cost model used in the paper's Figures 5-6: T*M*b per element -> d*bits
     per message (plus one norm float, which the paper's model folds in)."""

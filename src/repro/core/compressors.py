@@ -1,4 +1,5 @@
-"""Gradient compressor zoo.
+"""Gradient compressor zoo — thin registry aliases over the composable
+selector ∘ codec protocol (repro.core.schemes / repro.core.codecs).
 
 The paper's method ("gspar", Algorithms 2/3) plus every baseline it compares
 against or cites: uniform sampling (UniSp), QSGD [Alistarh et al.], TernGrad
@@ -6,6 +7,13 @@ against or cites: uniform sampling (UniSp), QSGD [Alistarh et al.], TernGrad
 identity. Each compressor maps (key, g) -> CompressedGrad with the sparsified
 (still-dense-layout) gradient, the probability vector used, and message-size
 accounting. All are shape-static and jit-safe.
+
+Since the composable-compression refactor each name here is a two-stage
+composition: gspar/unisp/topk are their selector with the float codec,
+``qsgd`` is identity ∘ qsgd<bits>, ``terngrad`` is bernoulli ∘ ternary. Any
+other composition (e.g. the Qsparse-style ``gspar+qsgd8``) is reachable via
+``make_compressor("gspar", codec="qsgd8", ...)`` or directly through
+``repro.core.schemes.make_scheme``.
 """
 from __future__ import annotations
 
@@ -16,7 +24,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import coding, sparsify
+from repro.core import schemes
 
 
 @jax.tree_util.register_dataclass
@@ -29,7 +37,7 @@ class CompressedGrad:
     var_ratio: jax.Array    # ||q||^2 / ||g||^2 (the paper's reported `var`)
 
 
-def _finish(g, q, p, bits) -> CompressedGrad:
+def finish_compressed(g, q, p, bits) -> CompressedGrad:
     g32 = g.astype(jnp.float32).reshape(-1)
     q32 = q.astype(jnp.float32).reshape(-1)
     den = jnp.sum(g32 * g32)
@@ -38,102 +46,63 @@ def _finish(g, q, p, bits) -> CompressedGrad:
                           var_ratio=var_ratio)
 
 
+def _compose(key, g, *, selector: str, codec: str | None = None, **kw):
+    return schemes.make_scheme(selector, codec=codec, **kw).compress(key, g)
+
+
 # ---------------------------------------------------------------------------
 # The paper's method
 # ---------------------------------------------------------------------------
 
 def gspar(key, g, *, eps: float = 1.0, algo: str = "greedy", rho: float = 0.1,
-          num_iters: int = 2, b: int = 32) -> CompressedGrad:
+          num_iters: int = 2, b: int = 32,
+          codec: str | None = None) -> CompressedGrad:
     """Wangni et al. unbiased sparsification with optimal probabilities.
 
     algo="closed": Algorithm 2 with variance budget (1+eps).
     algo="greedy": Algorithm 3 with target density rho (paper default, 2 iters).
     """
-    if algo == "closed":
-        p = sparsify.closed_form_probabilities(g, eps)
-    elif algo == "greedy":
-        p = sparsify.greedy_probabilities(g, rho, num_iters)
-    else:
-        raise ValueError(f"unknown gspar algo: {algo!r}")
-    q = sparsify.sparsify(key, g, p)
-    bits = coding.realized_coding_bits(q, p, b)
-    return _finish(g, q, p, bits)
+    return _compose(key, g, selector="gspar", codec=codec, eps=eps, algo=algo,
+                    rho=rho, num_iters=num_iters, float_bits=b)
 
 
 # ---------------------------------------------------------------------------
 # Baselines
 # ---------------------------------------------------------------------------
 
-def unisp(key, g, *, rho: float = 0.1, b: int = 32) -> CompressedGrad:
+def unisp(key, g, *, rho: float = 0.1, b: int = 32,
+          codec: str | None = None) -> CompressedGrad:
     """Uniform sampling baseline: p_i = rho everywhere (unbiased)."""
-    p = sparsify.uniform_probabilities(g, rho)
-    q = sparsify.sparsify(key, g, p)
-    d = q.size
-    nnz = jnp.sum((jnp.abs(q.reshape(-1)) > 0).astype(jnp.float32))
-    bits = nnz * (b + jnp.log2(jnp.asarray(float(d)))) + b
-    return _finish(g, q, p, bits)
+    return _compose(key, g, selector="unisp", codec=codec, rho=rho,
+                    float_bits=b)
 
 
-def topk(key, g, *, rho: float = 0.1, b: int = 32) -> CompressedGrad:
+def topk(key, g, *, rho: float = 0.1, b: int = 32,
+         codec: str | None = None) -> CompressedGrad:
     """Deterministic top-k by magnitude. BIASED -- pair with error feedback.
 
     Selection is by ``top_k`` *indices* with a strict k cut, not by a
-    magnitude threshold: a ``|g| >= thresh`` mask over-selects whenever
-    magnitudes tie at the k-th value (an all-ones gradient would transmit
-    all d coordinates while ``bits`` claims k), and marks p = 1 on
-    exactly-zero coordinates. Mirrors ``ReferenceBackend.compress_sparse``'s
-    topk branch, which the dense/gather equivalence tests compare against.
-    """
-    del key
-    flat = g.reshape(-1)
-    d = flat.shape[0]
-    k = max(1, int(round(rho * d)))
-    vals_mag, idx = jax.lax.top_k(jnp.abs(flat).astype(jnp.float32), k)
-    keep = vals_mag > 0                      # never transmit exact zeros
-    q = (jnp.zeros_like(flat).at[idx]
-         .set(jnp.where(keep, flat[idx], jnp.zeros((), flat.dtype)))
-         .reshape(g.shape))
-    p = (jnp.zeros((d,), jnp.float32).at[idx].set(keep.astype(jnp.float32))
-         .reshape(g.shape))
-    bits = float(k) * (b + jnp.log2(jnp.asarray(float(d)))) + b
-    return _finish(g, q, p, bits)
+    magnitude threshold (which over-selects on magnitude ties at the k-th
+    value and marks p = 1 on exactly-zero coordinates)."""
+    return _compose(key, g, selector="topk", codec=codec, rho=rho,
+                    float_bits=b)
 
 
 def qsgd(key, g, *, bits: int = 4) -> CompressedGrad:
-    """QSGD [Alistarh et al. 2017]: unbiased stochastic quantization to
-    s = 2^bits - 1 levels of |g_i| / ||g||_2."""
-    flat = g.reshape(-1).astype(jnp.float32)
-    d = flat.shape[0]
-    s = float(2 ** bits - 1)
-    norm = jnp.linalg.norm(flat)
-    scaled = jnp.where(norm > 0, jnp.abs(flat) / jnp.where(norm > 0, norm, 1.0), 0.0) * s
-    lo = jnp.floor(scaled)
-    prob_up = scaled - lo
-    u = jax.random.uniform(key, flat.shape)
-    level = lo + (u < prob_up)
-    q = (jnp.sign(flat) * level * norm / s).reshape(g.shape).astype(g.dtype)
-    p = jnp.ones_like(g, jnp.float32)
-    msg_bits = coding.qsgd_coding_bits(d, bits) + 32  # + the norm float
-    return _finish(g, q, p, msg_bits)
+    """QSGD [Alistarh et al. 2017]: identity selection composed with unbiased
+    stochastic quantization to s = 2^bits - 1 levels of |g_i| / ||g||_2."""
+    return _compose(key, g, selector="qsgd", qsgd_bits=bits)
 
 
 def terngrad(key, g, *, b: int = 32) -> CompressedGrad:
-    """TernGrad [Wen et al. 2017]: Q_i = max|g| * sign(g_i) * Bern(|g_i|/max|g|)."""
-    flat = g.reshape(-1).astype(jnp.float32)
-    st = jnp.max(jnp.abs(flat))
-    prob = jnp.where(st > 0, jnp.abs(flat) / jnp.where(st > 0, st, 1.0), 0.0)
-    u = jax.random.uniform(key, flat.shape)
-    q = (st * jnp.sign(flat) * (u < prob)).reshape(g.shape).astype(g.dtype)
-    p = prob.reshape(g.shape)
-    msg_bits = 2.0 * flat.shape[0] + b                # ternary map + scale float
-    return _finish(g, q, p, msg_bits)
+    """TernGrad [Wen et al. 2017]: Bernoulli(|g_i|/max|g|) selection composed
+    with the ternary codec — Q_i = max|g| * sign(g_i) * Z_i."""
+    return _compose(key, g, selector="terngrad", float_bits=b)
 
 
 def identity(key, g, *, b: int = 32) -> CompressedGrad:
     """No compression ("baseline" in the paper's figures)."""
-    del key
-    p = jnp.ones_like(g, jnp.float32)
-    return _finish(g, g, p, coding.dense_coding_bits(g.size, b))
+    return _compose(key, g, selector="none", float_bits=b)
 
 
 # ---------------------------------------------------------------------------
@@ -150,8 +119,20 @@ REGISTRY: dict[str, Callable] = {
 }
 
 
+def _generic(key, g, *, name: str, rho: float = 0.1, eps: float = 1.0,
+             algo: str = "greedy", num_iters: int = 2, b: int = 32,
+             bits: int = 4, codec: str | None = None) -> CompressedGrad:
+    return _compose(key, g, selector=name, codec=codec, rho=rho, eps=eps,
+                    algo=algo, num_iters=num_iters, qsgd_bits=bits,
+                    float_bits=b)
+
+
 def make_compressor(name: str, **kwargs) -> Callable:
-    """Return a (key, g) -> CompressedGrad callable with options bound."""
-    if name not in REGISTRY:
-        raise ValueError(f"unknown compressor {name!r}; have {sorted(REGISTRY)}")
-    return partial(REGISTRY[name], **kwargs)
+    """Return a (key, g) -> CompressedGrad callable with options bound.
+
+    ``name`` may be a registry key or a selector+codec composition string
+    (e.g. ``"gspar+qsgd8"``, ``"unisp+bf16"``, ``"bernoulli+ternary"``)."""
+    if name in REGISTRY:
+        return partial(REGISTRY[name], **kwargs)
+    schemes.parse_composition(name)                # raises on unknown names
+    return partial(_generic, name=name, **kwargs)

@@ -1,0 +1,332 @@
+"""Composable compression schemes: selector ∘ value-codec.
+
+The paper's coding model (section 3.3) treats a message as two orthogonal
+choices: *which* coordinates to send and *how many bits each value costs*.
+This module makes the factorization executable. A ``Selector`` produces the
+sampling probabilities and the kept (amplified) values; a ``ValueCodec``
+(repro.core.codecs) owns their wire representation. A ``Scheme`` composes
+the two — ``gspar+qsgd8`` is Qsparse-local-SGD-style sparsify-then-quantize
+(Basu et al. 2019), ``bernoulli ∘ ternary`` is exactly TernGrad — and every
+legacy compressor in repro.core.compressors is a thin alias over one.
+
+Selectors:
+  gspar     -- Wangni et al. optimal probabilities (Algorithm 2 closed-form
+               or Algorithm 3 greedy, per ``algo``); Bernoulli sample.
+  unisp     -- uniform p_i = rho.
+  topk      -- deterministic top-k by magnitude (biased; pair with EF).
+  bernoulli -- TernGrad's selection: p_i = |g_i| / max|g| (every kept value
+               amplifies to exactly sign(g_i) * max|g|).
+  identity  -- keep everything (p = 1); composition with a quantizing codec
+               gives the classic dense quantizers (qsgd = identity∘qsgd<N>).
+
+Each selector also owns the sparse wire's static message capacity: the rho
+targeters size ``k_cap = ceil(slack * rho * d)``; bernoulli and identity
+have data-dependent (unbounded) expected nnz, so their only truncation-free
+static capacity is ``d`` — that rule is what lets qsgd/terngrad ride the
+gather/packed wires natively instead of being banned from them.
+
+``Scheme.compress`` runs selector -> encode -> decode in *dense layout*, so
+the dense-wire path and the reference sparse backend share literally one
+computation: dense-vs-gather bit-identity per composition holds by
+construction. The PRNG key is split (selection draws, codec draws) only
+when the codec is stochastic, so all-float compositions keep the exact
+sampling stream of the pre-composition compressors.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codecs as codecs_lib
+from repro.core import coding, sparsify
+
+
+def _capacity_for(d: int, rho: float, slack: float) -> int:
+    # lazy import: repro.comm.__init__ pulls in comm.sync -> core.api, which
+    # imports this module — a top-level import here would cycle.
+    from repro.comm.compaction import capacity_for
+    return capacity_for(d, rho, slack)
+
+
+# ---------------------------------------------------------------------------
+# Selectors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GsparSelector:
+    """The paper's method: p = min(lambda |g|, 1) via Algorithm 2/3."""
+    rho: float = 0.1
+    eps: float = 1.0
+    algo: str = "greedy"
+    num_iters: int = 2
+
+    name = "gspar"
+    tail_implicit = True     # Q_B values are sign/lambda — index-only coding
+
+    def probabilities(self, g: jax.Array) -> jax.Array:
+        if self.algo == "closed":
+            return sparsify.closed_form_probabilities(g, self.eps)
+        if self.algo == "greedy":
+            return sparsify.greedy_probabilities(g, self.rho, self.num_iters)
+        raise ValueError(f"unknown gspar algo: {self.algo!r}")
+
+    def sample(self, key: jax.Array, g: jax.Array, p: jax.Array) -> jax.Array:
+        return sparsify.sparsify(key, g, p)
+
+    def capacity(self, d: int, slack: float) -> int:
+        return _capacity_for(d, self.rho, slack)
+
+    def realized_bits(self, q, p, d: int, vb: float) -> jax.Array:
+        return coding.realized_coding_bits(q, p, vb)
+
+
+@dataclasses.dataclass(frozen=True)
+class UnispSelector:
+    """Uniform sampling baseline: p_i = rho everywhere (unbiased)."""
+    rho: float = 0.1
+
+    name = "unisp"
+    tail_implicit = False
+
+    def probabilities(self, g: jax.Array) -> jax.Array:
+        return sparsify.uniform_probabilities(g, self.rho)
+
+    def sample(self, key: jax.Array, g: jax.Array, p: jax.Array) -> jax.Array:
+        return sparsify.sparsify(key, g, p)
+
+    def capacity(self, d: int, slack: float) -> int:
+        return _capacity_for(d, self.rho, slack)
+
+    def realized_bits(self, q, p, d: int, vb: float) -> jax.Array:
+        logd = jnp.log2(jnp.asarray(float(d)))
+        nnz = jnp.sum((jnp.abs(q.reshape(-1)) > 0).astype(jnp.float32))
+        return nnz * (vb + logd) + vb
+
+
+@dataclasses.dataclass(frozen=True)
+class TopkSelector:
+    """Deterministic top-k by magnitude. BIASED — pair with error feedback.
+
+    Selection is by ``top_k`` *indices* with a strict k cut (a magnitude
+    threshold over-selects on ties at the k-th value), and p = 0 on
+    exactly-zero coordinates."""
+    rho: float = 0.1
+
+    name = "topk"
+    tail_implicit = False
+
+    def k_target(self, d: int) -> int:
+        return max(1, int(round(self.rho * d)))
+
+    def probabilities(self, g: jax.Array) -> jax.Array:
+        flat = g.reshape(-1)
+        d = flat.shape[0]
+        vals_mag, idx = jax.lax.top_k(jnp.abs(flat).astype(jnp.float32),
+                                      self.k_target(d))
+        keep = vals_mag > 0                  # never transmit exact zeros
+        return (jnp.zeros((d,), jnp.float32).at[idx]
+                .set(keep.astype(jnp.float32)).reshape(g.shape))
+
+    def sample(self, key: jax.Array, g: jax.Array, p: jax.Array) -> jax.Array:
+        del key                              # deterministic
+        return (g.astype(jnp.float32).reshape(-1) * p.reshape(-1)) \
+            .astype(g.dtype).reshape(g.shape)
+
+    def capacity(self, d: int, slack: float) -> int:
+        return _capacity_for(d, self.rho, slack)
+
+    def realized_bits(self, q, p, d: int, vb: float) -> jax.Array:
+        logd = jnp.log2(jnp.asarray(float(d)))
+        return jnp.asarray(float(self.k_target(d)) * (vb + logd) + vb,
+                           jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class BernoulliSelector:
+    """TernGrad's selection: Z_i ~ Bern(|g_i| / max|g|). The amplified kept
+    value g_i / p_i is exactly sign(g_i) * max|g|, so the ternary codec is
+    lossless downstream of this selector. Expected nnz = ||g||_1 / ||g||_inf
+    is data-dependent and unbounded, hence capacity d (never truncates)."""
+
+    name = "bernoulli"
+    tail_implicit = True     # kept values are ±max|g|: sign + one header
+
+    def probabilities(self, g: jax.Array) -> jax.Array:
+        a = jnp.abs(g.astype(jnp.float32))
+        mx = jnp.max(a)
+        return jnp.where(mx > 0, a / jnp.where(mx > 0, mx, 1.0), 0.0)
+
+    def sample(self, key: jax.Array, g: jax.Array, p: jax.Array) -> jax.Array:
+        return sparsify.sparsify(key, g, p)
+
+    def capacity(self, d: int, slack: float) -> int:
+        del slack
+        return d
+
+    def realized_bits(self, q, p, d: int, vb: float) -> jax.Array:
+        return coding.realized_coding_bits(q, p, vb)
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentitySelector:
+    """Keep every coordinate (p = 1). Alone it is the identity compressor;
+    composed with a quantizing codec it yields the dense quantizers."""
+
+    name = "identity"
+    tail_implicit = False
+
+    def probabilities(self, g: jax.Array) -> jax.Array:
+        return jnp.ones_like(g, jnp.float32)
+
+    def sample(self, key: jax.Array, g: jax.Array, p: jax.Array) -> jax.Array:
+        del key, p
+        return g
+
+    def capacity(self, d: int, slack: float) -> int:
+        del slack
+        return d
+
+    def realized_bits(self, q, p, d: int, vb: float) -> jax.Array:
+        return jnp.asarray(coding.dense_coding_bits(d, int(vb)), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Composition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scheme:
+    """selector ∘ codec, with the joint coding-model accounting."""
+    selector: object
+    codec: object
+
+    @property
+    def name(self) -> str:
+        return f"{self.selector.name}+{self.codec.name}"
+
+    def split_key(self, key: jax.Array):
+        """(selection key, codec key); the codec key exists only for
+        stochastic codecs so all-float compositions keep the legacy
+        sampling stream bit-for-bit."""
+        if self.codec.stochastic:
+            k_sel, k_cod = jax.random.split(key)
+            return k_sel, k_cod
+        return key, None
+
+    def apply_dense(self, key: jax.Array, g: jax.Array):
+        """Run selection + encode + decode in dense layout.
+
+        Returns ``(q, p, wire, scale)`` where ``q`` is the decoded
+        transmitted gradient (leaf dtype, dense layout — what the dense
+        wire psums and what any sparse wire must reconstruct to), ``wire``
+        the codec-encoded dense-layout values (wire dtype), and ``scale``
+        the codec's per-message scale. Both wire paths derive from this one
+        computation, which is what makes them bit-identical per scheme.
+        """
+        k_sel, k_cod = self.split_key(key)
+        p = self.selector.probabilities(g)
+        v = self.selector.sample(k_sel, g, p)
+        codec = self.codec
+        scale = codec.scale(v)
+        if codec.rounds_values or codec.integer_coded:
+            u = (jax.random.uniform(k_cod, v.shape, jnp.float32)
+                 if codec.stochastic else None)
+            wire = codec.encode(v, scale, u)
+            q = codec.decode(wire, scale).astype(g.dtype)
+        else:
+            q = v.astype(g.dtype)
+            wire = q
+        return q, p, wire, scale
+
+    def message_bits(self, q, p, d: int) -> jax.Array:
+        """Realized coding-model bits for one sampled message."""
+        codec = self.codec
+        if codec.integer_coded:
+            return coding.quantized_coding_bits(
+                q, d, codec.value_bits, codec.dense_map_bits,
+                codec.header_bits)
+        return self.selector.realized_bits(q, p, d, codec.value_bits)
+
+    def compress(self, key: jax.Array, g: jax.Array):
+        """(key, g) -> CompressedGrad; the dense-wire entry point."""
+        from repro.core.compressors import finish_compressed
+        q, p, _, _ = self.apply_dense(key, g)
+        bits = self.message_bits(q, p, g.size)
+        return finish_compressed(g, q, p, bits)
+
+
+# ---------------------------------------------------------------------------
+# Registry / composition parsing
+# ---------------------------------------------------------------------------
+
+SELECTOR_NAMES = ("gspar", "unisp", "topk", "bernoulli", "identity")
+
+# legacy monolithic scheme names -> (selector, codec-or-None) aliases.
+# codec None means "use the configured/default codec".
+LEGACY_ALIASES = {
+    "qsgd": ("identity", "__qsgd_bits__"),   # resolved from qsgd_bits
+    "terngrad": ("bernoulli", "ternary"),
+    "none": ("identity", None),
+}
+
+
+def parse_composition(name: str, qsgd_bits: int = 4) -> tuple[str, str | None]:
+    """``"gspar+qsgd8"`` -> ("gspar", "qsgd8"); legacy monoliths
+    (``"qsgd"``, ``"terngrad"``, ``"none"``) map onto their factorization.
+    Returns (selector_name, codec_name_or_None)."""
+    parts = name.split("+")
+    if len(parts) > 2:
+        raise ValueError(f"malformed composition {name!r}; "
+                         "expected 'selector' or 'selector+codec'")
+    head, codec = parts[0], (parts[1] if len(parts) == 2 else None)
+    if head in LEGACY_ALIASES:
+        sel, legacy_codec = LEGACY_ALIASES[head]
+        if legacy_codec == "__qsgd_bits__":
+            legacy_codec = f"qsgd{qsgd_bits}"
+        if codec is not None:
+            raise ValueError(
+                f"{head!r} is a legacy monolithic scheme name (already "
+                f"selector+codec = {sel}+{legacy_codec}); it cannot take "
+                f"another codec suffix ({name!r}). Spell the composition "
+                f"explicitly, e.g. '{sel}+{codec}'.")
+        return sel, legacy_codec
+    if head not in SELECTOR_NAMES:
+        raise ValueError(f"unknown selector {head!r} in composition "
+                         f"{name!r}; have {SELECTOR_NAMES} plus legacy "
+                         f"aliases {tuple(LEGACY_ALIASES)}")
+    return head, codec
+
+
+def make_selector(name: str, *, rho: float = 0.1, eps: float = 1.0,
+                  algo: str = "greedy", num_iters: int = 2):
+    if name == "gspar":
+        return GsparSelector(rho=rho, eps=eps, algo=algo, num_iters=num_iters)
+    if name == "unisp":
+        return UnispSelector(rho=rho)
+    if name == "topk":
+        return TopkSelector(rho=rho)
+    if name == "bernoulli":
+        return BernoulliSelector()
+    if name == "identity":
+        return IdentitySelector()
+    raise ValueError(f"unknown selector {name!r}; have {SELECTOR_NAMES}")
+
+
+def make_scheme(name: str, *, codec: str | None = None, rho: float = 0.1,
+                eps: float = 1.0, algo: str = "greedy", num_iters: int = 2,
+                qsgd_bits: int = 4, float_bits: int = 32) -> Scheme:
+    """Build a Scheme from a composition name plus parameters. ``codec``
+    (explicit field) and a ``+codec`` suffix in ``name`` must agree."""
+    sel_name, parsed_codec = parse_composition(name, qsgd_bits=qsgd_bits)
+    if parsed_codec is not None and codec is not None \
+            and parsed_codec != codec:
+        raise ValueError(
+            f"conflicting codecs: composition {name!r} names "
+            f"{parsed_codec!r} but codec={codec!r} was also given")
+    codec_name = parsed_codec or codec or "f32"
+    return Scheme(
+        selector=make_selector(sel_name, rho=rho, eps=eps, algo=algo,
+                               num_iters=num_iters),
+        codec=codecs_lib.get(codec_name, float_bits=float_bits))

@@ -2,23 +2,33 @@
 backend behind it.
 
 ``SparseGrad`` is the wire-native form of a compressed gradient leaf: a
-fixed-capacity ``(values, idx)`` buffer pair plus per-leaf accounting. It is
-a registered pytree, so it vmaps (per-layer compression of scan-over-layers
-stacks), jits, and crosses shard_map boundaries like any array pair. The
-selection of nonzeros into the buffer happens exactly once, inside the
-backend — downstream consumers (repro.comm) exchange the buffers as-is and
-never re-discover nonzeros from a dense array.
+fixed-capacity ``(values, idx)`` buffer pair plus per-leaf accounting. Since
+the composable-compression refactor the ``values`` buffer holds the *codec-
+encoded* wire representation (bf16 for the bf16 codec, int8/int16 levels for
+ternary/qsgd) together with the codec's per-message ``scale``; consumers
+decode with ``decode_values()``. It is a registered pytree, so it vmaps
+(per-layer compression of scan-over-layers stacks), jits, and crosses
+shard_map boundaries like any array pair. The selection of nonzeros into
+the buffer happens exactly once, inside the backend — downstream consumers
+(repro.comm) exchange the buffers as-is and never re-discover nonzeros from
+a dense array.
 
 Backends (``CompressionConfig.backend``):
-  reference -- pure-jnp solvers from repro.core; one magnitude ``top_k``
-               per leaf. Bit-identical to the dense-wire compress_tree path
-               given the same PRNG key, which the dense-vs-gather
-               equivalence tests rely on.
+  reference -- the scheme's dense-layout pipeline (selector sample + codec
+               encode/decode in dense layout) followed by one magnitude
+               ``top_k`` per leaf. Bit-identical to the dense-wire
+               compress_tree path given the same PRNG key — the selection,
+               the codec draws, and the codec scale are literally the same
+               computation — which the dense-vs-gather equivalence tests
+               rely on for every composition.
   pallas    -- fused stats -> lambda -> sample -> compact kernel path from
-               repro.kernels.sparsify (sort-free counting selection). Covers
-               gspar/greedy, the paper's production configuration; other
-               schemes fall back to reference per leaf. Off-TPU the kernels
-               run in interpreter mode.
+               repro.kernels.sparsify (sort-free counting selection) for the
+               gspar/greedy selector; float codecs quantize inside the
+               kernel pass (the kernel's output dtype is the wire dtype),
+               integer codecs encode on the compact k_cap buffer — O(k_cap)
+               work, never a second O(d) pass. Other selectors fall back to
+               reference per leaf. Off-TPU the kernels run in interpreter
+               mode.
   auto      -- pallas on TPU, reference elsewhere.
 """
 from __future__ import annotations
@@ -30,7 +40,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import compaction
-from repro.core.compressors import make_compressor
+from repro.core import codecs as codecs_lib
+from repro.core import coding
+
+
+def _ones_scale():
+    return jnp.ones((), jnp.float32)
 
 
 @jax.tree_util.register_dataclass
@@ -41,15 +56,19 @@ class SparseGrad:
     For a stacked (scan-over-layers) leaf all array fields carry a leading
     layer axis and ``d``/``shape`` describe a single layer slice.
     """
-    values: jax.Array        # [k_cap] nonzero values, original leaf dtype
+    values: jax.Array        # [k_cap] codec-encoded wire values; padding
+                             # slots hold exact zeros
     idx: jax.Array           # [k_cap] int32 coordinates; padding slots hold
                              # an index whose value slot is exactly zero
     nnz: jax.Array           # realized nonzero count before any capacity drop
     p_sum: jax.Array         # sum of sampling probabilities (E[nnz])
     bits: jax.Array          # coding-model message bits for this leaf
     var_ratio: jax.Array     # ||Q(g)||^2 / ||g||^2 (the paper's `var`)
+    scale: jax.Array = dataclasses.field(default_factory=_ones_scale)
+                             # codec per-message scale (ones for float codecs)
     d: int = dataclasses.field(metadata=dict(static=True), default=0)
     shape: tuple = dataclasses.field(metadata=dict(static=True), default=())
+    codec: str = dataclasses.field(metadata=dict(static=True), default="f32")
 
     @property
     def k_cap(self) -> int:
@@ -65,9 +84,16 @@ class SparseGrad:
         miscalibrated solver (see bench_wire's expected-vs-realized row)."""
         return jnp.sum(self.p_sum) / (self.d * max(1, self.p_sum.size))
 
+    def decode_values(self) -> jax.Array:
+        """Codec-decoded f32 values — what the receiver reconstructs."""
+        codec = codecs_lib.get(self.codec)
+        if self.values.ndim == 2:        # stacked: per-layer scale
+            return jax.vmap(codec.decode)(self.values, self.scale)
+        return codec.decode(self.values, self.scale)
+
     def densify(self) -> jax.Array:
         """Dense reconstruction (modulo overflow drops), original shape."""
-        vals = self.values.astype(jnp.float32)
+        vals = self.decode_values()
         if self.values.ndim == 2:        # stacked: per-layer scatter
             dense = jax.vmap(lambda v, i: compaction.scatter(v, i, self.d))(
                 vals, self.idx)
@@ -92,137 +118,201 @@ class Backend(Protocol):
         ...
 
 
-def _wire_dtype(cfg):
-    """Value dtype the sparse wire actually carries (bf16 on 'packed')."""
-    return jnp.bfloat16 if cfg.wire == "packed" else None
-
-
-def _residual_from_buffers(g: jax.Array, sg: SparseGrad,
-                           wire_dtype=None) -> jax.Array:
+def _residual_from_buffers(g: jax.Array, sg: SparseGrad) -> jax.Array:
     """target minus the *transmitted* values, from the compact (values, idx)
     pair: a single scatter-subtract into the target. Padding slots carry
     exact zeros, so they are no-ops; elementwise it equals
     ``g - sg.densify()`` bit-for-bit — and hence the dense-wire residual
     ``target - Q(target)`` whenever nothing overflows the capacity (which
     the k_cap sizing guarantees; on overflow this form re-carries the
-    dropped survivors' error rather than losing it). ``wire_dtype`` rounds
-    the subtracted values to what the wire carries (bf16 on the packed
-    wire), so the quantization error of kept values is absorbed into the
-    residual instead of silently dropped."""
+    dropped survivors' error rather than losing it). The subtracted values
+    are codec-*decoded* — what the wire actually delivers — so quantization
+    error of kept values (bf16 rounding, qsgd/ternary levels) is absorbed
+    into the residual instead of silently dropped.
+
+    The scatter form is also what keeps the residual bit-identical to the
+    dense wire's under jit: a scatter's add never fma-contracts with the
+    decode multiply that produced the update values, so the dense path
+    computes its residual with the same identity-indexed scatter (see
+    repro.core.api.compress_tree)."""
     flat = g.reshape(-1)
-    vals = sg.values.reshape(-1)
-    if wire_dtype is not None:
-        vals = vals.astype(wire_dtype)
+    vals = sg.decode_values().reshape(-1)
     res = flat.at[sg.idx.reshape(-1)].add(-vals.astype(flat.dtype),
                                           mode="drop")
     return res.reshape(g.shape)
 
 
 class ReferenceBackend:
-    """Dense-layout compressor zoo + a single magnitude top_k per leaf."""
+    """The scheme's dense-layout pipeline + a single magnitude top_k per
+    leaf. Shares the dense wire's computation, hence bit-identical to it."""
     name = "reference"
 
     def compress_sparse(self, cfg, key, g, k_cap) -> SparseGrad:
-        if cfg.name == "topk":
-            # deterministic top-k needs no dense Q at all: one top_k serves
-            # as both the selection and the compaction.
-            flat = g.reshape(-1)
-            d = flat.shape[0]
-            k_target = max(1, int(round(cfg.rho * d)))
-            k = min(k_cap, k_target)
-            mag = jnp.abs(flat.astype(jnp.float32))
-            vals_mag, idx = jax.lax.top_k(mag, k_cap)
-            keep = jnp.arange(k_cap) < k
-            vals = jnp.where(keep & (vals_mag > 0), flat[idx],
-                             jnp.zeros((), flat.dtype))
-            q32 = vals.astype(jnp.float32)
-            den = jnp.sum(mag * mag)
-            var = jnp.where(den > 0, jnp.sum(q32 * q32)
-                            / jnp.where(den > 0, den, 1.0), 0.0)
-            logd = jnp.log2(jnp.asarray(float(d)))
-            bits = float(k_target) * (cfg.float_bits + logd) + cfg.float_bits
-            # nnz is the scheme's intended selection (bounded by the actual
-            # nonzero supply), pre-capacity — so overflow() reports the
-            # k_cap < k_target drop instead of silently hiding it.
-            nnz = jnp.minimum(jnp.sum((mag > 0).astype(jnp.int32)),
-                              jnp.int32(k_target))
-            return SparseGrad(values=vals, idx=idx.astype(jnp.int32),
-                              nnz=nnz,
-                              p_sum=jnp.asarray(float(k_target), jnp.float32),
-                              bits=jnp.asarray(bits, jnp.float32),
-                              var_ratio=var, d=d, shape=tuple(g.shape))
-        fn = make_compressor(cfg.name, **cfg.kwargs())
-        cg = fn(key, g)                      # elementwise; no selection inside
-        vals, idx, nnz = compaction.compact(cg.q, k_cap)
-        return SparseGrad(values=vals, idx=idx, nnz=nnz,
-                          p_sum=jnp.sum(cg.p), bits=cg.bits,
-                          var_ratio=cg.var_ratio, d=g.size,
-                          shape=tuple(g.shape))
+        scheme = cfg.scheme()
+        codec = scheme.codec
+        if scheme.selector.name == "topk" \
+                and not (codec.rounds_values or codec.integer_coded):
+            # deterministic top-k with a passthrough codec needs no dense Q
+            # at all: one top_k serves as both the selection and the
+            # compaction.
+            return self._topk_fast(cfg, scheme, g, k_cap)
+        q, p, wire, scale = scheme.apply_dense(key, g)
+        vals, idx, nnz = compaction.compact(q, k_cap)
+        # wire values at the selected coordinates: encode and selection
+        # commute (the codec is elementwise given the scale), and padding
+        # slots point at zero-magnitude coords whose encoded level is 0.
+        wire_vals = wire.reshape(-1)[idx]
+        bits = scheme.message_bits(q, p, g.size)
+        from repro.core.compressors import finish_compressed
+        cg = finish_compressed(g, q, p, bits)
+        return SparseGrad(values=wire_vals, idx=idx, nnz=nnz,
+                          p_sum=jnp.sum(p), bits=cg.bits,
+                          var_ratio=cg.var_ratio, scale=scale, d=g.size,
+                          shape=tuple(g.shape), codec=codec.name)
+
+    def _topk_fast(self, cfg, scheme, g, k_cap) -> SparseGrad:
+        codec = scheme.codec
+        flat = g.reshape(-1)
+        d = flat.shape[0]
+        k_target = scheme.selector.k_target(d)
+        k = min(k_cap, k_target)
+        mag = jnp.abs(flat.astype(jnp.float32))
+        vals_mag, idx = jax.lax.top_k(mag, k_cap)
+        keep = jnp.arange(k_cap) < k
+        vals = jnp.where(keep & (vals_mag > 0), flat[idx],
+                         jnp.zeros((), flat.dtype))
+        q32 = vals.astype(jnp.float32)
+        den = jnp.sum(mag * mag)
+        var = jnp.where(den > 0, jnp.sum(q32 * q32)
+                        / jnp.where(den > 0, den, 1.0), 0.0)
+        logd = jnp.log2(jnp.asarray(float(d)))
+        vb = codec.value_bits
+        bits = float(k_target) * (vb + logd) + vb
+        # nnz is the scheme's intended selection (bounded by the actual
+        # nonzero supply), pre-capacity — so overflow() reports the
+        # k_cap < k_target drop instead of silently hiding it.
+        nnz = jnp.minimum(jnp.sum((mag > 0).astype(jnp.int32)),
+                          jnp.int32(k_target))
+        return SparseGrad(values=vals.astype(codec.wire_dtype(flat.dtype)),
+                          idx=idx.astype(jnp.int32), nnz=nnz,
+                          p_sum=jnp.asarray(float(k_target), jnp.float32),
+                          bits=jnp.asarray(bits, jnp.float32),
+                          var_ratio=var, d=d, shape=tuple(g.shape),
+                          codec=codec.name)
 
     def compress_sparse_ef(self, cfg, key, g, k_cap):
         sg = self.compress_sparse(cfg, key, g, k_cap)
-        return sg, _residual_from_buffers(g, sg, _wire_dtype(cfg))
+        return sg, _residual_from_buffers(g, sg)
 
 
 class PallasBackend:
-    """Fused kernel path (repro.kernels.sparsify) for gspar/greedy; other
-    schemes delegate to the reference implementation leaf-by-leaf."""
+    """Fused kernel path (repro.kernels.sparsify) for the gspar/greedy
+    selector; other selectors delegate to the reference implementation
+    leaf-by-leaf. Float codecs quantize inside the kernel pass (the wire
+    dtype is the kernel's output dtype); integer codecs encode on the
+    compact k_cap buffer afterwards — never a second O(d) pass."""
     name = "pallas"
 
     def __init__(self, interpret: bool = False):
         self.interpret = interpret
         self._fallback = ReferenceBackend()
 
+    def _is_fused(self, cfg) -> bool:
+        return cfg.name.split("+")[0] == "gspar" and cfg.algo == "greedy"
+
     def compress_sparse(self, cfg, key, g, k_cap) -> SparseGrad:
-        if cfg.name != "gspar" or cfg.algo != "greedy":
+        if not self._is_fused(cfg):
             return self._fallback.compress_sparse(cfg, key, g, k_cap)
         from repro.kernels.sparsify import ops
-        u = jax.random.uniform(key, g.shape, jnp.float32)  # pregenerated
+        scheme = cfg.scheme()
+        codec = scheme.codec
+        k_sel, k_cod = scheme.split_key(key)
+        u = jax.random.uniform(k_sel, g.shape, jnp.float32)  # pregenerated
+        out_dtype = (None if codec.integer_coded
+                     else codec.wire_dtype(g.dtype))
         vals, idx, nnz, lam = ops.gspar_sparse(
             g.reshape(-1), u.reshape(-1), k_cap=k_cap, rho=cfg.rho,
-            num_iters=cfg.num_iters, interpret=self.interpret)
-        return self._account(cfg, g, vals, idx, nnz, lam)
+            num_iters=cfg.num_iters, interpret=self.interpret,
+            out_dtype=out_dtype)
+        vals, scale = self._encode_compact(codec, k_cod, vals)
+        return self._account(cfg, codec, g, vals, scale, idx, nnz, lam)
 
     def compress_sparse_ef(self, cfg, key, g, k_cap):
-        if cfg.name != "gspar" or cfg.algo != "greedy":
+        if not self._is_fused(cfg):
             return self._fallback.compress_sparse_ef(cfg, key, g, k_cap)
         from repro.kernels.sparsify import ops
-        u = jax.random.uniform(key, g.shape, jnp.float32)
-        # the fused kernel emits the residual g - Q(g) in the same pass as
-        # Q itself: one extra HBM write, no extra read.
+        scheme = cfg.scheme()
+        codec = scheme.codec
+        k_sel, k_cod = scheme.split_key(key)
+        u = jax.random.uniform(k_sel, g.shape, jnp.float32)
+        if codec.integer_coded:
+            # integer codecs encode downstream of the kernel (the scale is
+            # a reduction over the kept values, unknowable mid-pass), so
+            # the residual comes from one scatter-subtract of the DECODED
+            # values into the target — a single exact g - dec per kept
+            # coordinate, bit-identical to the reference backend, rather
+            # than the kernel's (g - v) plus a (v - dec) fold whose two
+            # roundings don't cancel.
+            vals, idx, nnz, lam = ops.gspar_sparse(
+                g.reshape(-1), u.reshape(-1), k_cap=k_cap, rho=cfg.rho,
+                num_iters=cfg.num_iters, interpret=self.interpret)
+            enc, scale = self._encode_compact(codec, k_cod, vals)
+            dec = codec.decode(enc, scale)
+            res = (g.reshape(-1).at[idx].add(-dec.astype(g.dtype),
+                                             mode="drop").reshape(g.shape))
+            return (self._account(cfg, codec, g, enc, scale, idx, nnz, lam),
+                    res)
+        # float codecs: the fused kernel emits the residual g - Q(g) in the
+        # same pass as Q itself (one extra HBM write, no extra read), and
+        # the kernel's Q output *is* the wire dtype, so the in-pass
+        # subtraction already charges the rounding of kept values to the
+        # residual.
         vals, idx, nnz, lam, res = ops.gspar_sparse_ef(
             g.reshape(-1), u.reshape(-1), k_cap=k_cap, rho=cfg.rho,
-            num_iters=cfg.num_iters, interpret=self.interpret)
-        wdt = _wire_dtype(cfg)
-        if wdt is not None:
-            # the packed wire rounds kept values to bf16: fold the rounding
-            # error into the residual with one k_cap-sized scatter (the
-            # fused kernel subtracted the pre-rounding values)
-            delta = vals - vals.astype(wdt).astype(vals.dtype)
-            res = res.at[idx].add(delta.astype(res.dtype), mode="drop")
-        return (self._account(cfg, g, vals, idx, nnz, lam),
+            num_iters=cfg.num_iters, interpret=self.interpret,
+            out_dtype=codec.wire_dtype(g.dtype))
+        return (self._account(cfg, codec, g, vals, _ones_scale(), idx, nnz,
+                              lam),
                 res.reshape(g.shape))
 
-    def _account(self, cfg, g, vals, idx, nnz, lam) -> SparseGrad:
+    def _encode_compact(self, codec, k_cod, vals):
+        """Integer-codec encode of the compact value buffer (k_cap work)."""
+        if not codec.integer_coded:
+            return vals, _ones_scale()
+        scale = codec.scale(vals)
+        u = (jax.random.uniform(k_cod, vals.shape, jnp.float32)
+             if codec.stochastic else None)
+        return codec.encode(vals, scale, u), scale
+
+    def _account(self, cfg, codec, g, vals, scale, idx, nnz,
+                 lam) -> SparseGrad:
         # accounting straight from the compact buffers + one elementwise pass
         # over |g| (never a dense Q materialization).
         a = jnp.abs(g.astype(jnp.float32)).reshape(-1)
         d = a.shape[0]
         p = jnp.where(a > 0, jnp.minimum(lam * a, 1.0), 0.0)
         den = jnp.sum(a * a)
-        v32 = vals.astype(jnp.float32)
+        v32 = codec.decode(vals, scale) if codec.integer_coded \
+            else vals.astype(jnp.float32)
         var = jnp.where(den > 0, jnp.sum(v32 * v32)
                         / jnp.where(den > 0, den, 1.0), 0.0)
-        valid = vals != 0
-        sure = p[idx] >= 1.0
-        logd = jnp.log2(jnp.asarray(float(d)))
-        b = cfg.float_bits
-        n_a = jnp.sum((valid & sure).astype(jnp.float32))
-        n_b = jnp.sum((valid & ~sure).astype(jnp.float32))
-        bits = n_a * (b + logd) + jnp.minimum(2.0 * d, n_b * logd) + b
+        valid = v32 != 0
+        vb = codec.value_bits
+        if codec.integer_coded:
+            # same coding model as the reference path (zeros in the compact
+            # buffer don't count, so passing it as q is exact)
+            bits = coding.quantized_coding_bits(v32, d, vb,
+                                                codec.dense_map_bits,
+                                                codec.header_bits)
+        else:
+            logd = jnp.log2(jnp.asarray(float(d)))
+            sure = p[idx] >= 1.0
+            n_a = jnp.sum((valid & sure).astype(jnp.float32))
+            n_b = jnp.sum((valid & ~sure).astype(jnp.float32))
+            bits = n_a * (vb + logd) + jnp.minimum(2.0 * d, n_b * logd) + vb
         return SparseGrad(values=vals, idx=idx, nnz=nnz, p_sum=jnp.sum(p),
-                          bits=bits, var_ratio=var, d=d,
-                          shape=tuple(g.shape))
+                          bits=bits, var_ratio=var, scale=scale, d=d,
+                          shape=tuple(g.shape), codec=codec.name)
 
 
 def resolve_backend(name: str, interpret: bool | None = None) -> Backend:

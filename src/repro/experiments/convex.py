@@ -18,7 +18,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import coding, sparsify
 from repro.core.compressors import make_compressor
 
 

@@ -68,8 +68,13 @@ def _sparsify_prng_body(g_ref, lam_ref, seed_ref, out_ref):
 
 
 def sparsify_2d(g: jax.Array, u: jax.Array, lam: jax.Array,
-                interpret: bool = False) -> jax.Array:
-    """g, u: [R, C] with R % BLOCK_R == 0, C % BLOCK_C == 0. lam: scalar."""
+                interpret: bool = False, out_dtype=None) -> jax.Array:
+    """g, u: [R, C] with R % BLOCK_R == 0, C % BLOCK_C == 0. lam: scalar.
+
+    ``out_dtype`` is the wire dtype of the emitted Q (defaults to g's): a
+    float value codec (e.g. bf16) quantizes the kept values inside this
+    same pass — the astype happens in VMEM on the way out, so the wire
+    representation costs no extra HBM traversal."""
     r, c = g.shape
     grid = (r // BLOCK_R, c // BLOCK_C)
     lam2 = jnp.asarray(lam, jnp.float32).reshape(1, 1)
@@ -83,18 +88,23 @@ def sparsify_2d(g: jax.Array, u: jax.Array, lam: jax.Array,
                          memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, c), g.dtype),
+        out_shape=jax.ShapeDtypeStruct((r, c), out_dtype or g.dtype),
         interpret=interpret,
         name="gspar_sparsify",
     )(g, u, lam2)
 
 
 def sparsify_ef_2d(g: jax.Array, u: jax.Array, lam: jax.Array,
-                   interpret: bool = False) -> tuple[jax.Array, jax.Array]:
-    """Fused Q(g) + residual: returns (Q, g - Q), both [R, C] in g's dtype.
-    The error-feedback twin of ``sparsify_2d`` — the residual subtraction
+                   interpret: bool = False,
+                   out_dtype=None) -> tuple[jax.Array, jax.Array]:
+    """Fused Q(g) + residual: returns (Q, g - Q), Q in ``out_dtype`` (the
+    wire dtype, default g's) and the residual in g's dtype. The
+    error-feedback twin of ``sparsify_2d`` — the residual subtraction
     happens in the same VMEM tile as the sample, so the EF update costs one
-    extra HBM write instead of a separate read-subtract-write pass."""
+    extra HBM write instead of a separate read-subtract-write pass. The
+    body subtracts Q *after* the out-dtype rounding, so a quantizing wire
+    dtype (bf16 codec) charges its rounding of kept values to the residual
+    inside the same pass."""
     r, c = g.shape
     grid = (r // BLOCK_R, c // BLOCK_C)
     lam2 = jnp.asarray(lam, jnp.float32).reshape(1, 1)
@@ -111,7 +121,8 @@ def sparsify_ef_2d(g: jax.Array, u: jax.Array, lam: jax.Array,
             pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
             pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
         ],
-        out_shape=[jax.ShapeDtypeStruct((r, c), g.dtype)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((r, c), out_dtype or g.dtype),
+                   jax.ShapeDtypeStruct((r, c), g.dtype)],
         interpret=interpret,
         name="gspar_sparsify_ef",
     )(g, u, lam2)

@@ -121,9 +121,11 @@ def gspar_sparsify(g: jax.Array, u: jax.Array, rho: float = 0.1,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("rho", "num_iters", "k_cap", "interpret"))
+                   static_argnames=("rho", "num_iters", "k_cap", "interpret",
+                                    "out_dtype"))
 def gspar_sparse(g: jax.Array, u: jax.Array, k_cap: int, rho: float = 0.1,
-                 num_iters: int = 2, interpret: bool = False):
+                 num_iters: int = 2, interpret: bool = False,
+                 out_dtype=None):
     """Fused stats -> lambda -> sample -> compact: emits the wire buffers
     ``(values[k_cap], idx[k_cap], nnz, lam)`` directly.
 
@@ -134,13 +136,18 @@ def gspar_sparse(g: jax.Array, u: jax.Array, k_cap: int, rho: float = 0.1,
     overflow itself stays ~impossible at the configured capacity slack.
     Padding slots carry idx 0 with value exactly 0, so scatter-add
     reconstruction is unaffected.
+
+    ``out_dtype`` (static) is the value codec's wire dtype: the fused
+    sample pass quantizes kept values on its way out of VMEM, so e.g. the
+    bf16 codec costs no extra traversal.
     """
     g2d, n, _, _ = _pad_2d(g.reshape(-1))
     u2d, _, _, _ = _pad_2d(u.reshape(-1).astype(jnp.float32))
     l1, _, mx = K.stats_2d(g2d, interpret=interpret)
     lam = greedy_lambda(l1, mx, rho, n, num_iters,
                         tail_fn=_kernel_tail_fn(g2d, n, interpret))
-    flat = K.sparsify_2d(g2d, u2d, lam, interpret=interpret).reshape(-1)[:n]
+    flat = K.sparsify_2d(g2d, u2d, lam, interpret=interpret,
+                         out_dtype=out_dtype).reshape(-1)[:n]
     vals, idx, nnz = _counting_compact(flat, k_cap)
     return vals, idx, nnz, lam
 
@@ -157,25 +164,31 @@ def _counting_compact(flat: jax.Array, k_cap: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("rho", "num_iters", "k_cap", "interpret"))
+                   static_argnames=("rho", "num_iters", "k_cap", "interpret",
+                                    "out_dtype"))
 def gspar_sparse_ef(g: jax.Array, u: jax.Array, k_cap: int, rho: float = 0.1,
-                    num_iters: int = 2, interpret: bool = False):
+                    num_iters: int = 2, interpret: bool = False,
+                    out_dtype=None):
     """Error-feedback twin of ``gspar_sparse``: the fused kernel subtracts
-    the kept (amplified, dtype-rounded) values from the target in the same
-    pass that samples them, emitting ``(values[k_cap], idx[k_cap], nnz,
-    lam, residual[d])`` with ``residual = g - Q(g)`` in g's dtype. On
-    overflow (nnz > k_cap) the dropped survivors remain *subtracted* from
-    the residual — they were sampled, just not transmitted — matching the
-    dense-wire semantics of ``target - Q(target)``; the reference sparse
-    backend instead re-carries their error (residual = target -
-    transmitted). The two agree exactly at zero overflow, which the
-    ``capacity_for`` sizing guarantees in configured operation."""
+    the kept (amplified, wire-dtype-rounded) values from the target in the
+    same pass that samples them, emitting ``(values[k_cap], idx[k_cap],
+    nnz, lam, residual[d])`` with ``residual = g - Q(g)`` in g's dtype and
+    values in ``out_dtype`` (the codec's wire dtype; the in-pass
+    subtraction therefore charges the wire rounding of kept values to the
+    residual with no post-hoc fold). On overflow (nnz > k_cap) the dropped
+    survivors remain *subtracted* from the residual — they were sampled,
+    just not transmitted — matching the dense-wire semantics of ``target -
+    Q(target)``; the reference sparse backend instead re-carries their
+    error (residual = target - transmitted). The two agree exactly at zero
+    overflow, which the ``capacity_for`` sizing guarantees in configured
+    operation."""
     g2d, n, _, _ = _pad_2d(g.reshape(-1))
     u2d, _, _, _ = _pad_2d(u.reshape(-1).astype(jnp.float32))
     l1, _, mx = K.stats_2d(g2d, interpret=interpret)
     lam = greedy_lambda(l1, mx, rho, n, num_iters,
                         tail_fn=_kernel_tail_fn(g2d, n, interpret))
-    q2d, res2d = K.sparsify_ef_2d(g2d, u2d, lam, interpret=interpret)
+    q2d, res2d = K.sparsify_ef_2d(g2d, u2d, lam, interpret=interpret,
+                                  out_dtype=out_dtype)
     flat = q2d.reshape(-1)[:n]
     vals, idx, nnz = _counting_compact(flat, k_cap)
     return vals, idx, nnz, lam, res2d.reshape(-1)[:n]

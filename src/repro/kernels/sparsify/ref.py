@@ -5,21 +5,23 @@ import jax
 import jax.numpy as jnp
 
 
-def sparsify_ref(g: jax.Array, u: jax.Array, lam: jax.Array) -> jax.Array:
+def sparsify_ref(g: jax.Array, u: jax.Array, lam: jax.Array,
+                 out_dtype=None) -> jax.Array:
     """Fused threshold-sample-scale (the inner loop of Algorithms 1+3):
 
         p_i = min(lam * |g_i|, 1)
         Z_i = [u_i < p_i]
         Q_i = Z_i * g_i / p_i
 
-    with 0/0 := 0. g, u same shape; lam scalar. The uniform draws arrive as an
-    input (the paper's section-5.3 pregenerated-randoms trick), so the oracle
-    is bit-exact against the kernel."""
+    with 0/0 := 0. g, u same shape; lam scalar; ``out_dtype`` the wire dtype
+    of Q (defaults to g's, matching the kernel). The uniform draws arrive as
+    an input (the paper's section-5.3 pregenerated-randoms trick), so the
+    oracle is bit-exact against the kernel."""
     g32 = g.astype(jnp.float32)
     p = jnp.minimum(lam * jnp.abs(g32), 1.0)
     z = u < p
     safe_p = jnp.where(p > 0, p, 1.0)
-    return jnp.where(z, g32 / safe_p, 0.0).astype(g.dtype)
+    return jnp.where(z, g32 / safe_p, 0.0).astype(out_dtype or g.dtype)
 
 
 def stats_ref(g: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:

@@ -37,7 +37,16 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--optimizer", default="adam", choices=["adam", "sgd"])
     ap.add_argument("--compressor", default="gspar",
-                    choices=["gspar", "unisp", "topk", "qsgd", "terngrad", "none"])
+                    help="selector[+codec] composition (gspar, unisp, topk, "
+                         "bernoulli, identity; e.g. 'gspar+qsgd8') or a "
+                         "legacy alias (qsgd, terngrad, none)")
+    ap.add_argument("--codec", default=None,
+                    choices=[None, "f32", "bf16", "qsgd4", "qsgd8",
+                             "ternary"],
+                    help="value codec for the kept coordinates (default: "
+                         "from --compressor, else f32)")
+    ap.add_argument("--qsgd-bits", type=int, default=4,
+                    help="levels exponent for the legacy 'qsgd' alias")
     ap.add_argument("--rho", type=float, default=0.05)
     ap.add_argument("--wire", default="dense",
                     choices=["dense", "gather", "packed"])
@@ -82,10 +91,12 @@ def main(argv=None):
 
     opt = (adam(args.lr) if args.optimizer == "adam" else sgd(args.lr))
     opt_state = opt.init(params)
-    comp = CompressionConfig(name=args.compressor, rho=args.rho,
+    comp = CompressionConfig(name=args.compressor, codec=args.codec,
+                             qsgd_bits=args.qsgd_bits, rho=args.rho,
                              wire=args.wire, backend=args.backend,
                              error_feedback=args.error_feedback,
                              min_leaf_size=1024)
+    print(f"compression: {comp.scheme().name} wire={comp.wire}")
     ef_state = None
     if comp.error_feedback:
         # compressed mode: stacked per-worker residual; fsdp: params-shaped

@@ -64,7 +64,7 @@ class TestSparseGrad:
         sg = ReferenceBackend().compress_sparse(cfg, jax.random.key(0), g,
                                                 k_cap=512)
         leaves = jax.tree.leaves(sg)
-        assert len(leaves) == 6                  # arrays only; d/shape static
+        assert len(leaves) == 7        # arrays only; d/shape/codec static
         rebuilt = jax.tree.map(lambda x: x, sg)
         assert rebuilt.d == sg.d and rebuilt.shape == sg.shape
 

@@ -1,6 +1,5 @@
 """Chunked (flash-style) attention == naive attention, across GQA/window/
 softcap/non-causal variants and ragged fallbacks."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

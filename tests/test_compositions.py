@@ -1,0 +1,429 @@
+"""Composable compression stack (selector ∘ codec) tests:
+
+  * dense-wire vs gather-wire bit-identity for EVERY registered composition
+    under the reference backend (the tentpole contract), incl. the legacy
+    monoliths qsgd/terngrad that used to be banned from the sparse wires
+  * gspar+qsgd8 and terngrad end-to-end on the gather wire of a real
+    (4 data x 2 model) device mesh, bit-identical to the dense wire
+  * closed-form (Algorithm 2) parity: gspar(algo="closed") through the
+    compress_tree_sparse reference fallback vs the dense path, same key —
+    the previously-untested fallback named in ROADMAP
+  * coding-model property: realized bits never exceed the Theorem-4-style
+    "every kept coordinate listed at full price" bound, and match
+    hand-computed bits on a small fixed vector, for every composition
+  * the int32 bucket-coordinate guard of the sparse wire
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from dist_harness import run_with_devices
+from repro.comm import compaction
+from repro.comm.sync import _bucketed_sync
+from repro.core import coding
+from repro.core.api import CompressionConfig, compress_tree, compress_tree_sparse
+from repro.core.sparse import SparseGrad
+
+COMPOSITIONS = ("gspar", "unisp", "topk", "qsgd", "terngrad", "none",
+                "gspar+bf16", "gspar+qsgd8", "gspar+ternary", "unisp+qsgd4",
+                "topk+ternary", "bernoulli+ternary", "identity+qsgd8")
+
+
+def _grad_tree(seed):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal(4096)
+                         * np.exp(rng.standard_normal(4096)), jnp.float32),
+        "stack": jnp.asarray(rng.standard_normal((3, 2048)), jnp.float32),
+        "tiny": jnp.asarray(rng.standard_normal(16), jnp.float32),
+    }
+
+
+STACKED = {"w": False, "stack": True, "tiny": False}
+
+
+def _densify_items(items, treedef):
+    leaves = [p if kind == "dense" else p.densify() for kind, p in items]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Dense vs gather bit-identity per composition (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+class TestCompositionWireEquivalence:
+    @pytest.mark.parametrize("name", COMPOSITIONS)
+    def test_dense_vs_gather_bit_identical(self, name):
+        """Same key, reference backend: the gather wire's decoded
+        reconstruction must equal the dense-wire Q bit-for-bit — including
+        the quantizing codecs, whose decode must happen identically on
+        both paths."""
+        grads = _grad_tree(0)
+        key = jax.random.key(3)
+        kw = dict(rho=0.05, min_leaf_size=64, backend="reference",
+                  capacity_slack=4.0)
+        q, _, stats_d = compress_tree(
+            CompressionConfig(name=name, wire="dense", **kw), key, grads,
+            stacked=STACKED)
+        items, _, treedef, stats_g = compress_tree_sparse(
+            CompressionConfig(name=name, wire="gather", **kw), key, grads,
+            stacked=STACKED)
+        recon = _densify_items(items, treedef)
+        for a, b in zip(jax.tree.leaves(q), jax.tree.leaves(recon)):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32),
+                np.asarray(b, np.float32).reshape(a.shape))
+        # the accounting agrees across wires too
+        assert float(stats_d.bits) == pytest.approx(float(stats_g.bits),
+                                                    rel=1e-6)
+
+    @pytest.mark.parametrize("name", ["qsgd", "terngrad"])
+    def test_legacy_dense_quantizers_ride_sparse_wire(self, name):
+        """qsgd/terngrad were DENSE_ONLY before the refactor; as
+        identity∘qsgd / bernoulli∘ternary they get capacity d (no silent
+        truncation possible) and integer wire buffers."""
+        grads = {"w": _grad_tree(1)["w"]}
+        cfg = CompressionConfig(name=name, wire="gather", min_leaf_size=8,
+                                backend="reference")
+        items, _, _, _ = compress_tree_sparse(cfg, jax.random.key(0), grads)
+        (_, sg), = items
+        assert sg.k_cap == grads["w"].size       # full capacity: zero bias
+        assert int(sg.overflow()) == 0
+        assert sg.values.dtype in (jnp.int8, jnp.int16)
+
+    def test_ternary_codec_lossless_after_bernoulli(self):
+        """Composed TernGrad is TernGrad: every bernoulli-kept value
+        amplifies to ±max|g| (up to the one amplification-rounding ulp of
+        g/p), so the ternary codec's stochastic rounding keeps everything
+        (p = |v|/scale = 1) and every decoded value is exactly ±scale."""
+        g = {"w": _grad_tree(2)["w"]}
+        cfg = CompressionConfig(name="terngrad", wire="gather",
+                                min_leaf_size=8, backend="reference")
+        items, _, _, _ = compress_tree_sparse(cfg, jax.random.key(5), g)
+        (_, sg), = items
+        dec = np.asarray(sg.decode_values())
+        scale = np.asarray(sg.scale, np.float32)
+        nz = dec[dec != 0]
+        assert len(nz) > 0
+        # nothing zeroed by the codec: every selected coordinate survived
+        assert len(nz) == int(sg.nnz)
+        np.testing.assert_array_equal(np.abs(nz), np.full(nz.shape, scale))
+        # and the scale is max|g| up to amplification roundoff
+        np.testing.assert_allclose(scale, float(jnp.max(jnp.abs(g["w"]))),
+                                   rtol=1e-6)
+
+
+class TestPallasCodecPaths:
+    """The fused backend's codec plumbing (non-EF): float codecs quantize
+    inside the kernel pass (out_dtype), integer codecs encode on the
+    compact buffer — wire dtypes, decode parity vs reference, and the
+    shared bits model."""
+
+    @pytest.mark.parametrize("codec,wdt", [("bf16", jnp.bfloat16),
+                                           ("qsgd8", jnp.int16),
+                                           ("ternary", jnp.int8)])
+    def test_pallas_codec_wire_dtype_and_decode(self, codec, wdt):
+        rng = np.random.default_rng(21)
+        g = {"w": jnp.asarray(rng.standard_normal(1 << 16)
+                              * np.exp(rng.standard_normal(1 << 16)),
+                              jnp.float32)}
+        key = jax.random.key(17)
+        base = dict(name="gspar", codec=codec, rho=0.05, wire="gather",
+                    min_leaf_size=8, capacity_slack=4.0)
+        pal_items, _, _, pal_stats = compress_tree_sparse(
+            CompressionConfig(**base, backend="pallas"), key, g)
+        ref_items, _, _, ref_stats = compress_tree_sparse(
+            CompressionConfig(**base, backend="reference"), key, g)
+        (_, sg), = pal_items
+        assert sg.values.dtype == wdt
+        a = np.asarray(ref_items[0][1].densify())
+        b = np.asarray(sg.densify())
+        scale = float(np.asarray(sg.scale))
+        if codec == "bf16":
+            # selection uniforms are shared (same key, in-kernel cast):
+            # support and values agree up to draw-at-threshold coords
+            assert float(np.mean((a != 0) != (b != 0))) < 2e-2
+            both = (a != 0) & (b != 0)
+            np.testing.assert_allclose(a[both], b[both], rtol=2e-2,
+                                       atol=1e-3)
+        elif codec == "qsgd8":
+            # the pallas path draws its codec uniforms on the compact
+            # buffer (reference draws dense-layout), so stochastic level
+            # rounding differs per coordinate — by at most one level step
+            both = (a != 0) & (b != 0)
+            step = scale / 255.0
+            assert np.abs(a[both] - b[both]).max() <= step * 1.01
+            # and every decoded value sits on the level grid
+            lv = b[b != 0] / step
+            np.testing.assert_allclose(lv, np.round(lv), atol=1e-3)
+        else:                                     # ternary
+            nz = b[b != 0]
+            assert len(nz) > 0
+            np.testing.assert_allclose(np.abs(nz), scale, rtol=1e-6)
+            # independent codec draws: densities agree statistically
+            assert np.mean(b != 0) == pytest.approx(np.mean(a != 0),
+                                                    rel=0.25)
+        # both backends charge the same coding model (same regime)
+        assert float(pal_stats.bits) == pytest.approx(
+            float(ref_stats.bits), rel=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: compositions on the gather wire of a real mesh
+# ---------------------------------------------------------------------------
+
+_DIST_COMMON = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.models import transformer as tf
+from repro.models.common import split_params
+from repro.core.api import CompressionConfig
+from repro.dist import sharding as shd
+from repro.launch import mesh as mesh_lib
+from repro.optim.optimizers import sgd
+from repro.train import step as step_lib
+
+cfg = tf.ModelConfig(name="tiny", vocab=64, d_model=32, pattern=("attn_full",),
+                     num_periods=2, num_heads=4, num_kv_heads=2, head_dim=8,
+                     d_ff=64, remat="none", dtype=jnp.float32)
+params_t = tf.init_model(jax.random.key(0), cfg)
+params, axes = split_params(params_t)
+batch = {"tokens": jax.random.randint(jax.random.key(1), (8, 16), 0, 64)}
+opt = sgd(0.05)
+opt_state = opt.init(params)
+"""
+
+
+@pytest.mark.parametrize("scheme", ["gspar+qsgd8", "terngrad"])
+def test_composition_trains_on_gather_wire_multidevice(scheme):
+    """The acceptance bar: a quantized composition runs Algorithm 1
+    end-to-end on a (4 data x 2 model) mesh's gather wire — int levels +
+    scales through the bucketed all_gather — and stays bit-identical to
+    the dense wire under the same key."""
+    out = run_with_devices(_DIST_COMMON + f"""
+mesh = mesh_lib.make_mesh((4, 2), ("data", "model"))
+rules = dict(shd.DP_RULES)
+steps = {{}}
+for wire in ("dense", "gather"):
+    comp = CompressionConfig(name="{scheme}", rho=0.25, wire=wire,
+                             min_leaf_size=8, capacity_slack=4.0,
+                             backend="reference")
+    with jax.set_mesh(mesh):
+        ts = jax.jit(step_lib.make_compressed_train_step(cfg, comp, opt,
+                                                         mesh, rules))
+        p, s = params, opt_state
+        for i in range(3):
+            p, s, m = ts(p, s, batch, jax.random.key(7 + i))
+        steps[wire] = (p, m)
+pd, pg = steps["dense"][0], steps["gather"][0]
+mx = max(jax.tree.leaves(jax.tree.map(
+    lambda a, b: float(jnp.max(jnp.abs(a - b))), pd, pg)))
+m = steps["gather"][1]
+print("max param diff", mx, "density", float(m["density"]),
+      "bits", float(m["bits"]), "wire_bytes", float(m["wire_bytes"]))
+assert mx == 0.0, mx
+assert float(m["bits"]) > 0 and float(m["wire_bytes"]) > 0
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_composition_ef_multidevice_exact():
+    """gspar+qsgd8 with error feedback on the gather wire of a real mesh:
+    params AND residual bit-identical to the dense wire across steps (the
+    residual absorbs the qsgd level rounding identically on both wires)."""
+    out = run_with_devices(_DIST_COMMON + """
+from repro.train.step import init_compressed_feedback
+mesh = mesh_lib.make_mesh((4, 2), ("data", "model"))
+rules = dict(shd.DP_RULES)
+out = {}
+for wire in ("dense", "gather"):
+    comp = CompressionConfig(name="gspar+qsgd8", rho=0.1, wire=wire,
+                             min_leaf_size=8, error_feedback=True,
+                             backend="reference", capacity_slack=4.0)
+    ef = init_compressed_feedback(cfg, comp, mesh)
+    with jax.set_mesh(mesh):
+        ts = jax.jit(step_lib.make_compressed_train_step(cfg, comp, opt,
+                                                         mesh, rules))
+        p, s = params, opt_state
+        for i in range(3):
+            p, s, ef, m = ts(p, s, ef, batch, jax.random.key(7 + i))
+    out[wire] = (p, ef)
+mx = max(jax.tree.leaves(jax.tree.map(
+    lambda a, b: float(jnp.max(jnp.abs(a - b))),
+    out["dense"][0], out["gather"][0])))
+mr = max(jax.tree.leaves(jax.tree.map(
+    lambda a, b: float(jnp.max(jnp.abs(a - b))),
+    out["dense"][1].residual, out["gather"][1].residual)))
+rl1 = sum(float(jnp.sum(jnp.abs(r)))
+          for r in jax.tree.leaves(out["gather"][1].residual))
+print("param diff", mx, "residual diff", mr, "residual l1", rl1)
+assert mx == 0.0 and mr == 0.0
+assert rl1 > 0.0
+print("OK")
+""")
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Closed-form (Algorithm 2) through the sparse reference fallback
+# ---------------------------------------------------------------------------
+
+class TestClosedFormSparseParity:
+    @pytest.mark.parametrize("eps", [0.5, 1.0, 4.0])
+    def test_closed_form_dense_vs_gather_bit_identical(self, eps):
+        """gspar(algo="closed") has no fused kernel: the sparse wire runs
+        it through the reference fallback. Same key => the compact buffers
+        must reconstruct the dense-path Q bit-for-bit, plain and stacked
+        leaves alike (the previously-untested fallback in ROADMAP)."""
+        grads = _grad_tree(4)
+        key = jax.random.key(11)
+        kw = dict(algo="closed", eps=eps, rho=0.5, min_leaf_size=64,
+                  backend="reference", capacity_slack=4.0)
+        q, _, _ = compress_tree(
+            CompressionConfig(name="gspar", wire="dense", **kw), key, grads,
+            stacked=STACKED)
+        items, _, treedef, _ = compress_tree_sparse(
+            CompressionConfig(name="gspar", wire="gather", **kw), key,
+            grads, stacked=STACKED)
+        for (kind, payload) in items:
+            if kind == "sparse":
+                assert int(jnp.sum(payload.overflow())) == 0
+        recon = _densify_items(items, treedef)
+        for a, b in zip(jax.tree.leaves(q), jax.tree.leaves(recon)):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32),
+                np.asarray(b, np.float32).reshape(a.shape))
+
+    def test_closed_form_pallas_backend_falls_back(self):
+        """backend='pallas' with algo='closed' must take the reference
+        fallback (the fused kernel only implements greedy) and match it."""
+        g = {"w": _grad_tree(5)["w"]}
+        key = jax.random.key(13)
+        kw = dict(name="gspar", algo="closed", eps=1.0, rho=0.5,
+                  wire="gather", min_leaf_size=8, capacity_slack=4.0)
+        ref_items, _, _, _ = compress_tree_sparse(
+            CompressionConfig(**kw, backend="reference"), key, g)
+        pal_items, _, _, _ = compress_tree_sparse(
+            CompressionConfig(**kw, backend="pallas"), key, g)
+        np.testing.assert_array_equal(
+            np.asarray(ref_items[0][1].densify()),
+            np.asarray(pal_items[0][1].densify()))
+
+
+# ---------------------------------------------------------------------------
+# Coding model: realized bits per composition
+# ---------------------------------------------------------------------------
+
+class TestCompositionCodingModel:
+    @pytest.mark.parametrize("name", COMPOSITIONS)
+    def test_realized_bits_within_listed_price_bound(self, name):
+        """Theorem-4-style sanity: a realized message never costs more
+        than every kept coordinate listed at full price — s(b + log2 d) +
+        min(s log2 d, 2d) + b with s = realized nnz and b = the codec's
+        value bits (the bound theorem4_bound_bits instantiates at rho=1)."""
+        rng = np.random.default_rng(7)
+        d = 2048
+        g = jnp.asarray(rng.standard_normal(d)
+                        * np.exp(1.5 * rng.standard_normal(d)), jnp.float32)
+        cfg = CompressionConfig(name=name, rho=0.05, min_leaf_size=8)
+        scheme = cfg.scheme()
+        cg = scheme.compress(jax.random.key(2), g)
+        nnz = int(jnp.sum(jnp.abs(cg.q) > 0))
+        vb = scheme.codec.value_bits
+        header = scheme.codec.header_bits
+        bound = coding.theorem4_bound_bits(max(nnz, 1), 1.0, d,
+                                           b=vb) + header
+        assert float(cg.bits) <= bound * (1 + 1e-6), \
+            (name, float(cg.bits), bound)
+
+    def test_float_bits_is_accounting_only(self):
+        """float_bits is the coding model's b, never a wire quantizer:
+        float_bits=16 must change the charged bits but transmit the exact
+        same values as float_bits=32 (only codec='bf16' actually rounds)."""
+        g = _grad_tree(8)["w"]
+        key = jax.random.key(19)
+        q32 = CompressionConfig(name="gspar", rho=0.05,
+                                float_bits=32).scheme().compress(key, g)
+        q16 = CompressionConfig(name="gspar", rho=0.05,
+                                float_bits=16).scheme().compress(key, g)
+        np.testing.assert_array_equal(np.asarray(q32.q), np.asarray(q16.q))
+        assert float(q16.bits) < float(q32.bits)
+        qbf = CompressionConfig(name="gspar", codec="bf16",
+                                rho=0.05).scheme().compress(key, g)
+        assert float(jnp.max(jnp.abs(qbf.q - q32.q))) > 0.0
+
+    def test_hand_computed_bits_small_vector(self):
+        """Fixed d=8 vector, hand-evaluated coding model per composition:
+        the implementation must reproduce the numbers exactly."""
+        g = jnp.asarray([4.0, -2.0, 1.0, 0.0, 0.5, -0.25, 0.0, 8.0])
+        d, logd = 8, 3.0
+        key = jax.random.key(9)
+        for name in COMPOSITIONS:
+            cfg = CompressionConfig(name=name, rho=0.25, min_leaf_size=1)
+            scheme = cfg.scheme()
+            cg = scheme.compress(key, g)
+            q = np.asarray(cg.q, np.float32)
+            p = np.asarray(cg.p, np.float32).reshape(-1)
+            nz = np.abs(q) > 0
+            vb = scheme.codec.value_bits
+            if scheme.codec.integer_coded:
+                expect = min(nz.sum() * (vb + logd),
+                             d * scheme.codec.dense_map_bits) \
+                    + scheme.codec.header_bits
+            elif scheme.selector.name in ("gspar", "bernoulli"):
+                n_a = (nz & (p >= 1.0)).sum()
+                n_b = (nz & (p < 1.0)).sum()
+                expect = n_a * (vb + logd) + min(2.0 * d, n_b * logd) + vb
+            elif scheme.selector.name == "unisp":
+                expect = nz.sum() * (vb + logd) + vb
+            elif scheme.selector.name == "topk":
+                expect = max(1, round(cfg.rho * d)) * (vb + logd) + vb
+            else:                                  # identity
+                expect = d * vb
+            assert float(cg.bits) == pytest.approx(float(expect),
+                                                   rel=1e-6), name
+
+
+# ---------------------------------------------------------------------------
+# Bucket coordinate-space guard
+# ---------------------------------------------------------------------------
+
+class TestBucketGuard:
+    def test_check_bucket_coords_raises_past_int32(self):
+        compaction.check_bucket_coords(2**31 - 1, 4)      # at the limit: ok
+        with pytest.raises(ValueError, match="[Cc]hunk"):
+            compaction.check_bucket_coords(2**31, 4)
+
+    def test_bucketed_sync_raises_on_oversized_tree(self):
+        """Three mocked 2^30-coordinate leaves: small k_cap buffers but a
+        static coordinate space past int32 — the sync must raise at trace
+        time with chunking advice instead of letting offsets wrap."""
+        from jax.sharding import PartitionSpec as P
+        big_d = 2**30
+        k = 128
+
+        def mock_leaf():
+            return SparseGrad(
+                values=jnp.ones((k,), jnp.float32),
+                idx=jnp.arange(k, dtype=jnp.int32),
+                nnz=jnp.asarray(k, jnp.int32),
+                p_sum=jnp.asarray(float(k)),
+                bits=jnp.zeros(()), var_ratio=jnp.zeros(()),
+                d=big_d, shape=(big_d,))
+
+        cfg = CompressionConfig(name="gspar", rho=0.001, wire="gather",
+                                min_leaf_size=8)
+        items = [("sparse", mock_leaf()) for _ in range(3)]
+        leaves = [None] * 3                      # untouched before the guard
+        mesh = jax.make_mesh((1,), ("data",))
+
+        def sync(_):
+            out, wire, ovf = _bucketed_sync(items, leaves, "data", cfg)
+            return ovf
+
+        with jax.set_mesh(mesh):
+            with pytest.raises(ValueError, match="[Cc]hunk"):
+                jax.jit(jax.shard_map(sync, mesh=mesh, in_specs=(P(),),
+                                      out_specs=P(), axis_names={"data"},
+                                      check_vma=False))(jnp.zeros(()))

@@ -4,8 +4,6 @@
   * compression-off compressed-mode step == pure-GSPMD fsdp step (exact sync)
   * multi-pod hierarchical re-sparsification (Alg. 1 step 7) runs and syncs
 """
-import pytest
-
 from dist_harness import run_with_devices
 
 COMMON = """

@@ -15,6 +15,7 @@ pin down:
     step budget on the paper's convex task (aggressive rho)
   * FeedbackState checkpoint round-trip
 """
+import dataclasses
 import os
 import tempfile
 
@@ -25,13 +26,14 @@ import pytest
 
 from repro.checkpoint import checkpoint
 from repro.comm.sync import sync_tree
-from repro.core.api import (DENSE_ONLY_SCHEMES, CompressionConfig,
-                            compress_tree, compress_tree_sparse)
+from repro.core.api import (CompressionConfig, compress_tree,
+                            compress_tree_sparse)
 from repro.data.synthetic import logreg_data
 from repro.experiments.convex import logreg_loss
 from repro.optim.optimizers import FeedbackState, init_feedback
 
-SCHEMES = ("gspar", "unisp", "topk", "qsgd", "terngrad", "none")
+SCHEMES = ("gspar", "unisp", "topk", "qsgd", "terngrad", "none",
+           "gspar+qsgd8", "unisp+bf16", "topk+ternary")
 WIRES = ("dense", "gather", "packed")
 
 
@@ -54,13 +56,17 @@ STACKED = {"w": False, "stack": True, "tiny": False}
 class TestConfigValidation:
     def test_every_combination_works_or_raises(self):
         """The full (scheme, wire, error_feedback) matrix either constructs
-        or raises a ValueError naming the unsupported pair."""
+        or raises a ValueError naming the unsupported pair. Since the
+        composable-compression refactor every scheme travels on every wire
+        (the dense-only ban became per-composition capacity rules); the
+        only invalid pairing left in the matrix is error feedback on the
+        residual-free identity∘f32."""
         for name in SCHEMES:
             for wire in WIRES:
                 for ef in (False, True):
-                    dense_only = wire != "dense" and name in DENSE_ONLY_SCHEMES
-                    ef_invalid = ef and name == "none"
-                    if dense_only or ef_invalid:
+                    # on the packed wire 'none' upgrades to identity∘bf16,
+                    # whose rounding error is a real residual — EF is valid
+                    if ef and name == "none" and wire != "packed":
                         with pytest.raises(ValueError, match="unsupported"):
                             CompressionConfig(name=name, wire=wire,
                                               error_feedback=ef)
@@ -68,10 +74,27 @@ class TestConfigValidation:
                         CompressionConfig(name=name, wire=wire,
                                           error_feedback=ef)
 
-    def test_dense_scheme_on_sparse_wire_names_pair(self):
-        with pytest.raises(ValueError) as ei:
-            CompressionConfig(name="qsgd", wire="gather")
-        assert "qsgd" in str(ei.value) and "gather" in str(ei.value)
+    def test_unbounded_selectors_get_full_capacity(self):
+        """qsgd/terngrad (identity/bernoulli selection) have data-dependent,
+        unbounded expected nnz: the only static sparse-wire capacity that
+        cannot silently truncate them into a biased average is d itself."""
+        for name in ("qsgd", "terngrad", "none"):
+            cfg = CompressionConfig(name=name, wire="gather", rho=0.01)
+            assert cfg.capacity(4096) == 4096
+        # rho-targeting selectors keep the slack * rho * d sizing
+        cfg = CompressionConfig(name="gspar+qsgd8", wire="gather", rho=0.01,
+                                capacity_slack=1.25)
+        assert cfg.capacity(1 << 20) == 13184
+
+    def test_malformed_compositions_raise(self):
+        with pytest.raises(ValueError, match="legacy"):
+            CompressionConfig(name="terngrad+bf16")
+        with pytest.raises(ValueError, match="selector"):
+            CompressionConfig(name="topsecret+qsgd8")
+        with pytest.raises(ValueError, match="codec"):
+            CompressionConfig(name="gspar+int3")
+        with pytest.raises(ValueError, match="conflicting"):
+            CompressionConfig(name="gspar+qsgd8", codec="bf16")
 
     def test_ef_with_resparsify_pods_raises(self):
         with pytest.raises(ValueError, match="resparsify_pods"):
@@ -168,28 +191,48 @@ class TestWireEquivalence:
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     @pytest.mark.parametrize("backend", ["reference", "pallas"])
-    def test_packed_wire_residual_absorbs_bf16_rounding(self, backend):
-        """The packed wire carries bf16 values: the residual must subtract
-        what the wire carries (bf16-rounded), not the full-precision kept
-        values, so the quantization error is re-sent instead of lost."""
+    @pytest.mark.parametrize("codec", ["bf16", "qsgd8", "ternary"])
+    def test_residual_absorbs_codec_quantization(self, backend, codec):
+        """Quantizing codecs round/re-level the kept values: the residual
+        must subtract what the wire actually carries (the codec-decoded
+        values), not the full-precision kept values, so the quantization
+        error is re-sent instead of lost — exactly (bit-identity, not
+        allclose), for both backends."""
         rng = np.random.default_rng(8)
         g = {"w": jnp.asarray(rng.standard_normal(8192)
                               * np.exp(rng.standard_normal(8192)),
                               jnp.float32)}
         res0 = jax.tree.map(jnp.zeros_like, g)
         key = jax.random.key(9)
-        cfg = CompressionConfig(name="gspar", rho=0.05, wire="packed",
-                                min_leaf_size=8, error_feedback=True,
-                                backend=backend, capacity_slack=4.0)
+        cfg = CompressionConfig(name="gspar", codec=codec, rho=0.05,
+                                wire="gather", min_leaf_size=8,
+                                error_feedback=True, backend=backend,
+                                capacity_slack=4.0)
         items, res, _, _ = compress_tree_sparse(cfg, key, g, residual=res0)
         (_, sg), = items
-        vals_wire = (sg.values.astype(jnp.bfloat16).astype(jnp.float32))
-        expect = g["w"].at[sg.idx].add(-vals_wire, mode="drop")
-        np.testing.assert_allclose(np.asarray(res["w"]), np.asarray(expect),
-                                   rtol=1e-5, atol=1e-6)
-        # the rounding error is genuinely nonzero (bf16 has 8 mantissa bits)
-        full_sub = g["w"].at[sg.idx].add(-sg.values, mode="drop")
-        assert float(jnp.max(jnp.abs(expect - full_sub))) > 0.0
+        assert sg.values.dtype == {"bf16": jnp.bfloat16, "qsgd8": jnp.int16,
+                                   "ternary": jnp.int8}[codec]
+        decoded = sg.decode_values()
+        expect = g["w"].at[sg.idx].add(-decoded, mode="drop")
+        np.testing.assert_array_equal(np.asarray(res["w"]),
+                                      np.asarray(expect))
+        # the quantization genuinely moved the kept values: the same config
+        # with the exact float codec transmits different values, so the
+        # decoded-vs-exact gap the residual re-carries is nonzero
+        cfg_f32 = dataclasses.replace(cfg, codec="f32")
+        items_f32, _, _, _ = compress_tree_sparse(cfg_f32, key, g,
+                                                  residual=res0)
+        (_, sg_f32), = items_f32
+        gap = float(jnp.max(jnp.abs(sg.densify() - sg_f32.densify())))
+        assert gap > 0.0
+
+    def test_packed_wire_defaults_to_bf16_codec(self):
+        """wire='packed' with no explicit codec upgrades f32 -> bf16: the
+        pre-refactor packed transform, now expressed as a codec."""
+        cfg = CompressionConfig(name="gspar", wire="packed")
+        assert cfg.scheme().codec.name == "bf16"
+        cfg2 = CompressionConfig(name="gspar", codec="qsgd8", wire="packed")
+        assert cfg2.scheme().codec.name == "qsgd8"
 
     def test_pallas_backend_residual_matches_reference(self):
         """The fused-kernel residual (subtract in the same pass) agrees with

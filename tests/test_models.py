@@ -2,7 +2,6 @@
 train-vs-(prefill+decode) consistency for every block family — attention
 (full/sliding), MLA (absorbed decode), RWKV6, Mamba2, MoE, shared-attn hybrid,
 and enc-dec."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import checkpoint
 from repro.core.api import CompressionConfig
