@@ -11,6 +11,12 @@ scan-over-layers stack, a handful of tiny vectors):
     coding-model bits, density;
   * wire bytes actually moved per step (SyncStats accounting), the coding-
     model message bits, and realized density;
+  * per-composition wire-format-v2 accounting, side by side: coding-model
+    bits, realized layout bytes (the statically chosen COO / bitmap /
+    index-elided dense layout per leaf, `repro.comm.wire_layout`), and the
+    off-wire Golomb delta-coded estimate of the index stream — asserting
+    that identity+qsgd8 and bernoulli+ternary now ride the gather wire
+    strictly below the dense psum's bytes (the old ROADMAP caveat);
   * bit-consistency of the pallas backend (interpret mode on CPU) against
     the pure-jnp reference of the same fused pipeline on the pregenerated-
     uniforms path — asserted, not just reported.
@@ -31,9 +37,51 @@ from benchmarks.common import save_json, timed_us
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # the composition matrix the refactor unlocked: each entry is measured on
-# the dense + gather wires with the reference backend
+# the dense + gather wires with the reference backend. identity+qsgd8 and
+# bernoulli+ternary are the wire-format-v2 acceptance pair: full-capacity
+# (k_cap = d) compositions whose realized gather bytes must undercut the
+# dense psum now that the index stream is elided for them.
 COMPOSED_SCHEMES = ("gspar", "gspar+bf16", "gspar+qsgd8", "topk+ternary",
-                    "terngrad", "qsgd")
+                    "terngrad", "qsgd", "identity+qsgd8", "bernoulli+ternary")
+
+# full-capacity compositions that must beat the dense wire's bytes at
+# matched density (asserted below, gated in CI by scripts/check_bench.py)
+DENSE_BEATERS = ("identity+qsgd8", "bernoulli+ternary", "terngrad", "qsgd")
+
+
+def _wire_v2_accounting(items):
+    """Offline wire-format accounting for one composition's sparse items:
+    realized layout bytes (what the bucketed collective ships under the
+    stamped layouts, incl. per-message scales), the Golomb delta-coded
+    entropy estimate of the same messages (live values + coded index gaps),
+    and the per-layout leaf census."""
+    from repro.core import codecs as codecs_lib
+    from repro.core import coding
+
+    layout_bytes = 0.0
+    entropy_bytes = 0.0
+    layouts: dict = {}
+    for kind, p in items:
+        if kind == "dense":                   # tiny leaves: f32 psum
+            layout_bytes += p.size * 4
+            entropy_bytes += p.size * 4
+            continue
+        layouts[p.layout] = layouts.get(p.layout, 0) + 1
+        layout_bytes += p.realized_wire_bits() / 8
+        has_scale = codecs_lib.get(p.codec).has_scale
+        vals = np.asarray(p.values)
+        idxs = np.asarray(p.idx)
+        if vals.ndim == 1:
+            vals, idxs = vals[None], idxs[None]
+        for v, ix in zip(vals, idxs):         # per layer
+            live = v != 0
+            entropy_bytes += (int(live.sum()) * v.dtype.itemsize
+                              + coding.delta_coded_index_bits(ix[live],
+                                                              p.d) / 8)
+            if has_scale:
+                layout_bytes += 4
+                entropy_bytes += 4
+    return layout_bytes, entropy_bytes, layouts
 
 
 def _leaf_set(quick: bool):
@@ -59,7 +107,7 @@ def run(quick: bool = False, return_payload: bool = False):
     from jax.sharding import PartitionSpec as P
 
     from repro.comm.sync import sync_tree
-    from repro.core.api import CompressionConfig
+    from repro.core.api import CompressionConfig, compress_tree_sparse
 
     rows, payload = [], {}
     grads, stacked = _leaf_set(quick)
@@ -148,18 +196,43 @@ def run(quick: bool = False, return_payload: bool = False):
                 "density": float(stats.density),
                 "overflow": float(stats.overflow),
             }
+            if wire == "gather":
+                # wire-format-v2 columns, side by side with the coding
+                # model: realized layout bytes + Golomb-coded estimate of
+                # the SAME message the measured sync just shipped —
+                # sync_tree folds the worker index into the key, which on
+                # this 1-device data axis is fold_in(key, 0).
+                worker_key = jax.random.fold_in(jax.random.key(7), 0)
+                items, _, _, _ = compress_tree_sparse(cfg, worker_key, grads)
+                lb, eb, lay = _wire_v2_accounting(items)
+                rec["layout_bytes"] = lb
+                rec["entropy_bytes"] = eb
+                rec["layouts"] = lay
             tag = f"scheme:{scheme}:{wire}"
             payload[tag] = rec
+            extra = (f";layouts={'/'.join(sorted(rec['layouts']))};"
+                     f"layout_bytes={rec['layout_bytes']:.3g};"
+                     f"entropy_bytes={rec['entropy_bytes']:.3g}"
+                     if wire == "gather" else "")
             rows.append((f"wire:{tag}", us,
                          f"wire_bytes={rec['wire_bytes']:.3g};"
                          f"bits={rec['bits']:.3g}"
                          f"(dense={rec['dense_bits']:.3g});"
-                         f"density={rec['density']:.4f}"))
+                         f"density={rec['density']:.4f}" + extra))
+
+    # the wire-format-v2 acceptance bar (also the ROADMAP caveat this
+    # closes): full-capacity quantized compositions must now move fewer
+    # realized bytes on the gather wire than the dense psum of the same
+    # tree — the index stream is elided, not just modeled away.
+    for scheme in DENSE_BEATERS:
+        got = payload[f"scheme:{scheme}:gather"]["wire_bytes"]
+        assert got < dense_bytes, (
+            f"{scheme}: realized gather bytes {got:.0f} >= dense psum "
+            f"{dense_bytes:.0f} — the wire-layout index elision regressed")
 
     # solver calibration: expected density (sum of sampling probabilities,
     # SparseGrad.p_sum) vs realized nnz over the leaf set — a persistent gap
     # flags a miscalibrated lambda.
-    from repro.core.api import compress_tree_sparse
     cal_cfg = CompressionConfig(name="gspar", rho=rho, wire="gather",
                                 min_leaf_size=256, backend="reference")
     items, _, _, _ = compress_tree_sparse(cal_cfg, jax.random.key(11), grads,

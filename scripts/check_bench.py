@@ -1,0 +1,104 @@
+"""CI regression gate for realized wire bytes.
+
+Compares a freshly generated ``BENCH_wire.json`` against the committed
+baseline and fails when any composition's *realized* byte metrics regress
+beyond its tolerance band. Timing fields are deliberately ignored (CI
+runners are noisy); byte metrics are statically determined by the wire
+format, so any growth is a real protocol regression — exactly what the
+wire-format-v2 work exists to prevent silently re-happening.
+
+    python scripts/check_bench.py FRESH BASELINE [--tolerance 0.02]
+
+Rules:
+  * gated metrics: ``wire_bytes``, ``layout_bytes``, ``entropy_bytes`` —
+    fresh must not exceed baseline * (1 + tol) for any key carrying them;
+  * per-composition tolerance overrides in ``TOLERANCES`` (longest matching
+    key prefix wins) for rows with sampling-dependent byte counts;
+  * a key present in the baseline but missing from the fresh payload fails
+    (silent coverage loss); new keys pass with a note;
+  * improvements beyond the band are reported (refresh the baseline to
+    lock them in) but never fail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_METRICS = ("wire_bytes", "layout_bytes", "entropy_bytes")
+
+# Longest-prefix tolerance overrides per composition key. Most byte counts
+# are static (shapes + k_cap + layout), hence the tight default; the
+# entropy-coded estimate rides the realized index *draw*, so that metric
+# gets a floor of slack everywhere (METRIC_TOLERANCES).
+TOLERANCES: dict[str, float] = {}
+METRIC_TOLERANCES = {"entropy_bytes": 0.10}
+# keys that are informational only (never gated even if numeric)
+SKIP_KEYS = ("calibration", "bit_consistency")
+
+
+def band(key: str, metric: str, default: float) -> float:
+    best, tol = -1, default
+    for prefix, t in TOLERANCES.items():
+        if key.startswith(prefix) and len(prefix) > best:
+            best, tol = len(prefix), t
+    return max(tol, METRIC_TOLERANCES.get(metric, 0.0))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly generated BENCH_wire.json")
+    ap.add_argument("baseline", help="committed baseline BENCH_wire.json")
+    ap.add_argument("--tolerance", type=float, default=0.02,
+                    help="default allowed relative regression per metric")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures, notes = [], []
+    for key, brec in sorted(base.items()):
+        if key in SKIP_KEYS or not isinstance(brec, dict):
+            continue
+        frec = fresh.get(key)
+        if frec is None:
+            failures.append(f"{key}: present in baseline but missing from "
+                            "fresh run (benchmark coverage regressed)")
+            continue
+        for metric in GATED_METRICS:
+            if metric not in brec:
+                continue
+            if metric not in frec:
+                failures.append(f"{key}.{metric}: dropped from fresh payload")
+                continue
+            b, x = float(brec[metric]), float(frec[metric])
+            tol = band(key, metric, args.tolerance)
+            if x > b * (1 + tol):
+                failures.append(
+                    f"{key}.{metric}: {x:.0f} > baseline {b:.0f} "
+                    f"(+{(x / b - 1) * 100:.1f}%, band {tol * 100:.0f}%)")
+            elif b > 0 and x < b * (1 - tol):
+                notes.append(
+                    f"{key}.{metric}: improved {b:.0f} -> {x:.0f} "
+                    f"({(1 - x / b) * 100:.1f}% — refresh the baseline to "
+                    "lock it in)")
+    for key in sorted(set(fresh) - set(base)):
+        notes.append(f"{key}: new in fresh run (not gated yet — commit the "
+                     "regenerated baseline to start gating it)")
+
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        for msg in failures:
+            print(f"::error::wire-byte regression: {msg}")
+        print(f"\n{len(failures)} wire-byte regression(s) vs {args.baseline}",
+              file=sys.stderr)
+        return 1
+    print(f"wire bytes OK: {args.fresh} within tolerance of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

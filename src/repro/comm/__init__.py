@@ -1,14 +1,24 @@
 """Distributed gradient-exchange layer: sparse All-Reduce on TPU meshes."""
-from repro.comm.compaction import capacity_for, compact, scatter
+from repro.comm.compaction import (bitmap_pack, bitmap_select, bitmap_words,
+                                   capacity_for, compact, scatter)
 
-__all__ = ["capacity_for", "compact", "scatter", "SyncStats", "sync_tree"]
+__all__ = ["capacity_for", "compact", "scatter", "bitmap_pack",
+           "bitmap_select", "bitmap_words", "SyncStats", "sync_tree",
+           "wire_layout"]
 
 
 def __getattr__(name):
     # repro.comm.sync consumes repro.core.sparse, which itself needs
-    # repro.comm.compaction; loading sync lazily keeps the package importable
-    # from either end of that chain.
+    # repro.comm.compaction (and wire_layout needs repro.core.coding);
+    # loading those lazily keeps the package importable from either end of
+    # the chain.
     if name in ("SyncStats", "sync_tree", "sync"):
         from repro.comm import sync as _sync
         return _sync if name == "sync" else getattr(_sync, name)
+    if name == "wire_layout":
+        # importlib, not `from repro.comm import ...`: the fromlist path
+        # consults this very __getattr__ before importing the submodule,
+        # which would recurse.
+        import importlib
+        return importlib.import_module("repro.comm.wire_layout")
     raise AttributeError(f"module 'repro.comm' has no attribute {name!r}")

@@ -76,3 +76,76 @@ def scatter(vals: jax.Array, idx: jax.Array, d: int) -> jax.Array:
     """
     out = jnp.zeros((d,), vals.dtype)
     return out.at[idx.reshape(-1)].add(vals.reshape(-1), mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Bitmap index coding (the BITMAP wire layout, repro.comm.wire_layout):
+# the compact idx stream becomes a packed d-bit occupancy map in int32 words.
+# Everything here is fixed-shape bit arithmetic — it jits, vmaps (stacked
+# leaves), and crosses shard_map boundaries like any other array op.
+# ---------------------------------------------------------------------------
+
+WORD_BITS = 32
+
+
+def bitmap_words(d: int) -> int:
+    """int32 words needed for a d-bit occupancy map."""
+    return -(-d // WORD_BITS)
+
+
+def bitmap_pack(vals: jax.Array, idx: jax.Array, d: int,
+                nnz: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """(values, idx) compact pair -> (coordinate-ordered values, occupancy
+    words).
+
+    Generic path (``nnz=None``): slots whose value is exactly zero
+    (compaction padding, codec-zeroed levels) carry no bit and sort to the
+    tail of the value buffer, so the receiver's rank-gather
+    (``bitmap_select``) reconstructs the message exactly. Live coordinates
+    are unique by construction (one top_k / one counting pass per leaf),
+    so the word scatter-add never collides bits.
+
+    Sorted path (``nnz`` given): for buffers whose valid prefix
+    (``min(nnz, k_cap)`` slots) is already in ascending coordinate order —
+    the pallas backend's counting compaction, flagged by
+    ``SparseGrad.idx_sorted`` — the O(k log k) argsort is elided entirely.
+    Every valid-prefix slot gets a bit, including codec-zeroed levels: a
+    zero value at a mapped coordinate reconstructs to exactly zero, and
+    the fixed d-bit map costs the same either way.
+    """
+    flat = vals.reshape(-1)
+    if nnz is None:
+        key = jnp.where(flat != 0, idx.reshape(-1), jnp.int32(d))  # dead last
+        order = jnp.argsort(key)
+        svals = flat[order]
+        sidx = key[order]
+    else:
+        valid = (jnp.arange(flat.shape[0], dtype=jnp.int32)
+                 < jnp.minimum(nnz, flat.shape[0]))
+        svals = flat
+        sidx = jnp.where(valid, idx.reshape(-1), jnp.int32(d))
+    word = jnp.where(sidx < d, sidx // WORD_BITS, bitmap_words(d))  # dead: drop
+    bit = jnp.uint32(1) << (sidx % WORD_BITS).astype(jnp.uint32)
+    words = jnp.zeros((bitmap_words(d),), jnp.uint32).at[word].add(
+        jnp.where(sidx < d, bit, jnp.uint32(0)), mode="drop")
+    # int32 on the wire: the sparse buckets concatenate index streams as
+    # int32, so bit 31 rides the sign bit via a bitcast (never a convert,
+    # which would be UB past 2^31).
+    return svals, jax.lax.bitcast_convert_type(words, jnp.int32)
+
+
+def bitmap_select(words: jax.Array, vals: jax.Array, d: int) -> jax.Array:
+    """Dense reconstruction of a bitmap-coded message: ``words [..., W]``
+    (int32 occupancy) + ``vals [..., k]`` (coordinate-ordered values) ->
+    ``[..., d]``. The rank of each set bit (an inclusive cumsum) gathers its
+    value; unset coordinates decode to exact zeros. Batch dims broadcast, so
+    gathered [workers, ...] buffers and stacked leaves decode in one call.
+    """
+    u = jax.lax.bitcast_convert_type(words, jnp.uint32)
+    bits = (u[..., :, None] >> jnp.arange(WORD_BITS, dtype=jnp.uint32)) \
+        & jnp.uint32(1)
+    mask = bits.reshape(bits.shape[:-2] + (-1,))[..., :d]
+    rank = jnp.cumsum(mask.astype(jnp.int32), axis=-1) - 1
+    sel = jnp.take_along_axis(
+        vals, jnp.clip(rank, 0, vals.shape[-1] - 1), axis=-1)
+    return jnp.where(mask != 0, sel, jnp.zeros((), vals.dtype))

@@ -24,8 +24,12 @@ The sparse wires are *bucketed*: every leaf's buffers are offset into one
 concatenated coordinate space and exchanged with a single all_gather pair
 per wire dtype, so a tree of hundreds of small leaves costs O(1) collectives
 instead of O(n_leaves). Tiny (dense-passthrough) leaves share one psum the
-same way. Compression happens exactly once per leaf, in the backend — this
-layer never re-discovers nonzeros from a dense array.
+same way. Each leaf ships under its statically stamped wire layout
+(repro.comm.wire_layout): int32 COO list, packed occupancy bitmap, or an
+index-elided dense value run — whichever realizes the fewest bytes, so
+full-capacity compositions (identity∘qsgd, bernoulli∘ternary) pay zero
+index overhead. Compression happens exactly once per leaf, in the backend —
+this layer never re-discovers nonzeros from a dense array.
 
 Multi-pod: with ``resparsify_pods`` the intra-pod average is re-sparsified
 before the inter-pod exchange — exactly the optional step 7 of Algorithm 1,
@@ -40,7 +44,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.comm import compaction
+from repro.comm import compaction, wire_layout
 from repro.core.api import (CompressionConfig, compress_tree,
                             compress_tree_sparse)
 from repro.core.sparse import SparseGrad
@@ -100,6 +104,12 @@ def _compact_items(cfg: CompressionConfig, leaves: list, stk_leaves: list):
     scheme = cfg.scheme()
     codec = scheme.codec
     items = []
+
+    def layout_for(k_cap, d, leaf_dtype):
+        return wire_layout.choose(
+            k_cap, d, wire_layout.value_bits_of(codec.wire_dtype(leaf_dtype)),
+            cfg.wire_layout)
+
     for leaf, stk in zip(leaves, stk_leaves):
         if leaf.size < cfg.min_leaf_size:
             items.append(("dense", leaf))
@@ -118,7 +128,8 @@ def _compact_items(cfg: CompressionConfig, leaves: list, stk_leaves: list):
                 p_sum=nnz.astype(jnp.float32),   # deterministic: E[nnz]=nnz
                 bits=jnp.zeros((layers,), jnp.float32),
                 var_ratio=jnp.zeros((layers,), jnp.float32),
-                scale=scale, d=d_l, shape=(d_l,), codec=codec.name)))
+                scale=scale, d=d_l, shape=(d_l,), codec=codec.name,
+                layout=layout_for(k_cap, d_l, leaf.dtype))))
             continue
         k_cap = scheme.selector.capacity(leaf.size, cfg.capacity_slack)
         vals, idx, nnz = compaction.compact(leaf, k_cap)
@@ -126,7 +137,8 @@ def _compact_items(cfg: CompressionConfig, leaves: list, stk_leaves: list):
         items.append(("sparse", SparseGrad(
             values=vals, idx=idx, nnz=nnz, p_sum=nnz.astype(jnp.float32),
             bits=zero, var_ratio=zero, scale=scale, d=leaf.size,
-            shape=tuple(leaf.shape), codec=codec.name)))
+            shape=tuple(leaf.shape), codec=codec.name,
+            layout=layout_for(k_cap, leaf.size, leaf.dtype))))
     return items
 
 
@@ -151,16 +163,24 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
                    cfg: CompressionConfig):
     """Exchange all leaves with one collective per (kind, wire-dtype) group.
 
-    Sparse leaves are offset into a single concatenated coordinate space:
-    one all_gather for values, one for indices, one scatter-add back into a
-    flat buffer covering the whole tree. Values travel codec-encoded (the
+    Sparse leaves are offset into a single concatenated coordinate space
+    and packed per their statically stamped wire layout
+    (repro.comm.wire_layout): COO leaves contribute (values, int32
+    coordinates), BITMAP leaves (coordinate-ordered values, packed
+    occupancy words), DENSE leaves an index-elided value run. One
+    all_gather moves the bucket's value stream, one the concatenated int32
+    index/word stream (skipped entirely when every leaf elides its index),
+    then a single scatter-add in worker-major order reconstructs the flat
+    bucket — bitmap rank-gathers and dense iotas feed the same scatter, so
+    every layout accumulates in the same sequential order as the dense
+    psum (the bit-identity contract). Values travel codec-encoded (the
     backend already emitted the wire representation); codecs with a
     per-message scale gather the (tiny) scale vector alongside and decode
     locally after the collective, per (worker, leaf, layer) slot. Dense-
-    passthrough leaves share one psum. Indices are int32 — a single bucket
-    therefore addresses up to 2^31 coordinates (~8.6 GB of f32 gradient per
-    dtype group); beyond that ``check_bucket_coords`` raises at trace time
-    with chunking advice instead of letting the offsets wrap.
+    passthrough leaves share one psum. Coordinates are int32 — a single
+    bucket therefore addresses up to 2^31 coordinates (~8.6 GB of f32
+    gradient per dtype group); beyond that ``check_bucket_coords`` raises
+    at trace time with chunking advice instead of letting the offsets wrap.
     """
     m = _axis_size(axis)
     codec = cfg.scheme().codec
@@ -198,61 +218,71 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
         compaction.check_bucket_coords(
             sum((items[i][1].values.shape[0] if items[i][1].values.ndim == 2
                  else 1) * items[i][1].d for i in ids), len(ids))
-        vals_parts, idx_parts, scale_parts, slot_parts = [], [], [], []
-        offset = 0
+        vals_parts, widx_parts, scale_parts, slot_parts = [], [], [], []
+        plans: list = []                 # (item id, LeafPlan, v_off, i_off,
+        coord_off = 0                    #  coord_off) — the bucket's static
+        v_off = 0                        #  self-description
+        i_off = 0
         s_off = 0
         for i in ids:
             sg = items[i][1]
-            k = sg.values.shape[-1]
-            if sg.values.ndim == 2:          # stacked: [L, k] per-layer buffers
-                layers = sg.values.shape[0]
-                gidx = sg.idx + (jnp.arange(layers, dtype=jnp.int32)
-                                 * sg.d)[:, None]
-                block = layers * sg.d
-                n_scales = layers
-            else:
-                gidx = sg.idx
-                block = sg.d
-                n_scales = 1
+            lp = wire_layout.plan(sg)
+            v2d, w2d = wire_layout.pack(sg, lp)  # [L, val_len], [L, idx_len]
+            if lp.layout == "coo":
+                # only coordinate lists get the bucket offset; bitmap words
+                # are opaque bit payload and dense runs ship no index at all
+                w2d = (w2d + (jnp.arange(lp.layers, dtype=jnp.int32)
+                              * lp.d)[:, None] + jnp.int32(coord_off))
+            if lp.idx_len:
+                widx_parts.append(w2d.reshape(-1))
+            vals_parts.append(v2d.reshape(-1))
             if codec.has_scale:
                 slot_parts.append(
-                    jnp.repeat(jnp.arange(n_scales, dtype=jnp.int32), k)
-                    + jnp.int32(s_off))
+                    jnp.repeat(jnp.arange(lp.layers, dtype=jnp.int32),
+                               lp.val_len) + jnp.int32(s_off))
                 scale_parts.append(jnp.asarray(sg.scale, jnp.float32)
                                    .reshape(-1))
-            idx_parts.append((gidx + jnp.int32(offset)).reshape(-1))
-            vals_parts.append(sg.values.reshape(-1))
-            offset += block
-            s_off += n_scales
+            plans.append((i, lp, v_off, i_off, coord_off))
+            v_off += lp.layers * lp.val_len
+            i_off += lp.layers * lp.idx_len
+            coord_off += lp.block
+            s_off += lp.layers
             overflow = overflow + jnp.sum(sg.overflow())
         vals_flat = jnp.concatenate(vals_parts)
-        idx_flat = jnp.concatenate(idx_parts)
-        gvals = jax.lax.all_gather(vals_flat, axis, tiled=False)  # [m, K]
-        gidx = jax.lax.all_gather(idx_flat, axis, tiled=False)
+        gvals = jax.lax.all_gather(vals_flat, axis, tiled=False)  # [m, V]
+        if widx_parts:
+            widx_flat = jnp.concatenate(widx_parts)
+            gwidx = jax.lax.all_gather(widx_flat, axis, tiled=False)  # [m, I]
+            wire += float(widx_flat.size * 4)
+        else:
+            gwidx = None                 # every leaf elided its index stream
         if codec.has_scale:
             # per-message scales ride a third (tiny: one f32 per leaf/layer)
             # all_gather; each slot decodes with its own worker's scale.
             scales_flat = jnp.concatenate(scale_parts)           # [S]
-            slot_map = jnp.concatenate(slot_parts)               # [K]
+            slot_map = jnp.concatenate(slot_parts)               # [V]
             gscales = jax.lax.all_gather(scales_flat, axis,
                                          tiled=False)            # [m, S]
             decoded = codec.decode(gvals, gscales[:, slot_map])
             wire += float(scales_flat.size * 4)
         else:
             decoded = gvals.astype(jnp.float32)
-        dense = jnp.zeros((offset,), jnp.float32)
-        dense = dense.at[gidx.reshape(-1)].add(
-            decoded.reshape(-1), mode="drop") / m
-        off = 0
-        for i in ids:
-            sg = items[i][1]
+        upd_parts, coord_parts = [], []
+        for (i, lp, v0, i0, c0) in plans:
+            dv = decoded[:, v0:v0 + lp.layers * lp.val_len]
+            wseg = (gwidx[:, i0:i0 + lp.layers * lp.idx_len]
+                    if lp.idx_len else None)
+            upd, crd = wire_layout.unpack_gathered(lp, dv, wseg, c0)
+            upd_parts.append(upd)
+            coord_parts.append(crd)
+        dense = jnp.zeros((coord_off,), jnp.float32)
+        dense = dense.at[jnp.concatenate(coord_parts, axis=1).reshape(-1)].add(
+            jnp.concatenate(upd_parts, axis=1).reshape(-1), mode="drop") / m
+        for (i, lp, _, _, c0) in plans:
             leaf = leaves[i]
-            block = (sg.values.shape[0] * sg.d if sg.values.ndim == 2
-                     else sg.d)
-            out[i] = (dense[off:off + block].reshape(leaf.shape)
+            out[i] = (dense[c0:c0 + lp.block].reshape(leaf.shape)
                       .astype(leaf.dtype))
-            off += block
-        wire += float(vals_flat.size) * (wdt.itemsize + 4)
+        wire += float(vals_flat.size) * wdt.itemsize
 
     return out, wire, overflow
 

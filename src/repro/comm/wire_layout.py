@@ -1,0 +1,150 @@
+"""Self-describing wire layouts for the bucketed sparse collectives.
+
+The paper's section-3.3 hybrid code picks, per message, between an index
+list and a dense ternary map — whichever is shorter. This module realizes
+that choice on the actual HLO collective: every ``SparseGrad`` leaf is
+stamped with a *statically chosen* layout (from ``(k_cap, d)`` and the codec
+wire width — all trace-time constants), and ``repro.comm.sync`` packs /
+unpacks each per-dtype bucket accordingly:
+
+  coo    -- today's baseline: k_cap codec-encoded values + k_cap int32
+            coordinates. Wins at low density (k_cap << d / INDEX_BITS).
+  bitmap -- k_cap values in coordinate order + a packed d-bit occupancy map
+            in int32 words (repro.comm.compaction.bitmap_pack). The paper's
+            "dense map" branch realized on the wire: wins once the int32
+            index list outweighs d bits, i.e. k_cap > d / 32-ish.
+  dense  -- d values in coordinate order, index stream elided entirely. The
+            identity/bernoulli selectors size k_cap = d, so qsgd/terngrad
+            finally ride the sparse wire with zero index overhead (and it
+            also wins for near-full rho-capped buffers, where d value slots
+            undercut k_cap values + any index stream).
+
+The chooser is argmin over ``coding.realized_wire_bits`` — realized bytes
+are minimal per bucket *by construction*, which the property tests in
+tests/test_wire_layout.py pin. All three layouts are fixed-shape, so they
+jit, vmap (scan-over-layers stacks), and cross shard_map boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import compaction
+from repro.core import coding
+
+LAYOUTS = ("coo", "bitmap", "dense")
+# tie-break by decode cost: dense (pure slice-add) < coo (scatter) < bitmap
+# (rank-gather). Static, so ties resolve identically on every trace.
+_PREFERENCE = ("dense", "coo", "bitmap")
+
+
+def value_bits_of(dtype) -> float:
+    """Wire width of one value slot in bits (the realized twin of the
+    coding model's b)."""
+    return float(jnp.dtype(dtype).itemsize * 8)
+
+
+def choose(k_cap: int, d: int, value_bits: float,
+           override: str = "auto") -> str:
+    """Static layout selection for one leaf (per layer): the layout whose
+    realized wire bits are minimal — the paper's shorter-of-the-branches
+    rule cashed out with int32 index words. ``override`` forces a specific
+    layout (CompressionConfig.wire_layout / --wire-layout)."""
+    if override != "auto":
+        if override not in LAYOUTS:
+            raise ValueError(f"unknown wire layout {override!r}; "
+                             f"have {LAYOUTS + ('auto',)}")
+        return override
+    return min(_PREFERENCE,
+               key=lambda l: coding.realized_wire_bits(l, k_cap, d,
+                                                       value_bits))
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """Static wire description of one leaf's segments inside a bucket —
+    what makes the bucket self-describing: every stream length and offset
+    is derivable at trace time from the plans alone."""
+    layout: str
+    layers: int              # 1 for flat leaves
+    d: int                   # coordinates per layer
+    k_cap: int
+    val_len: int             # value slots per layer on the wire
+    idx_len: int             # int32 index words per layer on the wire
+
+    @property
+    def block(self) -> int:
+        """Coordinates this leaf spans in the bucket's flat space."""
+        return self.layers * self.d
+
+
+def plan(sg) -> LeafPlan:
+    """The static wire plan for one SparseGrad (layout stamped by the
+    backend; ``coo`` for pre-layout producers, e.g. hand-built buffers)."""
+    layers = sg.values.shape[0] if sg.values.ndim == 2 else 1
+    layout = sg.layout
+    if layout == "coo":
+        val_len, idx_len = sg.k_cap, sg.k_cap
+    elif layout == "bitmap":
+        val_len, idx_len = sg.k_cap, compaction.bitmap_words(sg.d)
+    elif layout == "dense":
+        val_len, idx_len = sg.d, 0
+    else:
+        raise ValueError(f"unknown wire layout {layout!r}; have {LAYOUTS}")
+    return LeafPlan(layout=layout, layers=layers, d=sg.d, k_cap=sg.k_cap,
+                    val_len=val_len, idx_len=idx_len)
+
+
+def pack(sg, lp: LeafPlan) -> tuple[jax.Array, jax.Array]:
+    """Encode one SparseGrad's compact buffers into its wire streams:
+    ``(values [layers, val_len], index words [layers, idx_len])``. Index
+    words are layer-local coordinates for coo (the bucket offsets them) and
+    opaque bit words for bitmap. Values stay codec-encoded throughout.
+    Coordinate-sorted producers (``sg.idx_sorted``) pack the bitmap sort-
+    free from their authoritative nnz."""
+
+    def one(vals, idx, nnz):
+        if lp.layout == "coo":
+            return vals, idx
+        if lp.layout == "dense":
+            # coordinate order = a scatter of the compact pair; padding
+            # slots add exact zeros, live coordinates are unique, so this
+            # is the dense wire array bit-for-bit (encode and scatter
+            # commute for the elementwise codecs).
+            return (compaction.scatter(vals, idx, lp.d),
+                    jnp.zeros((0,), jnp.int32))
+        return compaction.bitmap_pack(vals, idx, lp.d,
+                                      nnz=nnz if sg.idx_sorted else None)
+
+    if sg.values.ndim == 2:
+        return jax.vmap(one)(sg.values, sg.idx, sg.nnz)
+    v, w = one(sg.values, sg.idx, sg.nnz)
+    return v[None, :], w[None, :]
+
+
+def unpack_gathered(lp: LeafPlan, decoded: jax.Array, widx: jax.Array | None,
+                    coord_off: int) -> tuple[jax.Array, jax.Array]:
+    """Turn one leaf's gathered+decoded segment back into scatter-ready
+    ``(updates [m, X], coords [m, X])`` against the bucket's flat space.
+
+    ``decoded [m, layers*val_len]`` is the codec-decoded value segment;
+    ``widx [m, layers*idx_len]`` the index-word segment (coo words arrive
+    already globally offset; None for dense). The per-worker update values
+    are exact — bitmap decoding is a pure rank-gather, dense an iota — so
+    one bucket-wide scatter-add accumulates every layout in the same
+    worker-major order, keeping the sparse wires bit-identical to the dense
+    psum's sequential reduction.
+    """
+    m = decoded.shape[0]
+    if lp.layout == "coo":
+        return decoded, widx
+    iota = jnp.broadcast_to(jnp.arange(lp.block, dtype=jnp.int32)
+                            + jnp.int32(coord_off), (m, lp.block))
+    if lp.layout == "dense":
+        return decoded, iota
+    dense = compaction.bitmap_select(
+        widx.reshape(m, lp.layers, lp.idx_len),
+        decoded.reshape(m, lp.layers, lp.val_len), lp.d)
+    return dense.reshape(m, lp.block), iota

@@ -8,11 +8,52 @@ The hybrid message format:
 
 Theorem 4 bound for a (rho, s)-approximately sparse gradient:
   E H[Q(g)] <= s*(b + log2 d) + min(rho*s*log2 d, 2d) + b
+
+Two accounting families live here:
+  * the coding *model* (``expected_coding_bits`` / ``realized_coding_bits`` /
+    ``quantized_coding_bits``): entropy-style bits with log2(d)-bit indices —
+    what the paper charges;
+  * the *realized wire* (``realized_wire_bits``): what a WireLayout
+    (repro.comm.wire_layout) actually ships over the collective, with int32
+    index words. The model side shares one branch-cost helper
+    (``hybrid_branch_bits``) and the realized side takes its word geometry
+    from the packer itself (repro.comm.compaction), so neither family can
+    drift from the other — or from the bytes on the wire.
+
+``delta_coded_index_bits`` is the off-wire estimator bridging the two: what
+the int32 index stream would cost under Golomb/Elias-gamma delta coding of
+the sorted coordinate gaps — the entropy-coded bytes column of bench_wire.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# the packer's word geometry IS the accounting's word geometry: one
+# constant, one rounding rule, shared with repro.comm.compaction so the
+# layout chooser can never charge a different word width than the
+# collective ships (compaction imports only jax — no cycle).
+from repro.comm.compaction import WORD_BITS, bitmap_words
+
+# Realized index width on the sparse wires: COO coordinates travel as int32
+# (the bucketed collectives address up to 2^31 coords per wire-dtype group).
+INDEX_BITS = 32
+
+
+def hybrid_branch_bits(n, d: int, per_item_bits, map_bits: float):
+    """Section 3.3's two-branch minimum, shared by the coding model and the
+    wire-layout chooser: ``n`` items listed at ``per_item_bits`` each, OR a
+    dense map of ``map_bits`` per coordinate — whichever is shorter.
+
+    The paper's Q_B branch is ``(n, log2 d, 2.0)`` (index list vs the dense
+    ternary map); an integer-coded message is ``(nnz, value_bits + log2 d,
+    codec.dense_map_bits)``; the realized bitmap-vs-COO index choice is the
+    same structure at ``(k_cap, INDEX_BITS, 1.0)`` modulo word rounding.
+    """
+    return jnp.minimum(n * per_item_bits, float(d) * map_bits)
 
 
 def expected_coding_bits(p: jax.Array, b: int = 32) -> jax.Array:
@@ -28,7 +69,7 @@ def expected_coding_bits(p: jax.Array, b: int = 32) -> jax.Array:
     n_sure = jnp.sum(sure.astype(jnp.float32))
     tail_mass = jnp.sum(jnp.where(sure, 0.0, p))
     qa_bits = n_sure * (b + logd)
-    qb_bits = jnp.minimum(2.0 * d, logd * tail_mass)
+    qb_bits = hybrid_branch_bits(tail_mass, d, logd, 2.0)
     return qa_bits + qb_bits + b
 
 
@@ -49,13 +90,12 @@ def realized_coding_bits(q: jax.Array, p: jax.Array, b: int = 32) -> jax.Array:
     n_a = jnp.sum((nz & sure).astype(jnp.float32))
     n_b = jnp.sum((nz & ~sure).astype(jnp.float32))
     qa_bits = n_a * (b + logd)
-    qb_bits = jnp.minimum(2.0 * d, n_b * logd)   # index list vs dense ternary map
+    qb_bits = hybrid_branch_bits(n_b, d, logd, 2.0)  # list vs dense ternary map
     return qa_bits + qb_bits + b
 
 
 def theorem4_bound_bits(s: int, rho: float, d: int, b: int = 32) -> float:
     """The Theorem 4 upper bound: s(b + log2 d) + min(rho*s*log2 d, 2d) + b."""
-    import math
     logd = math.log2(d)
     return s * (b + logd) + min(rho * s * logd, 2.0 * d) + b
 
@@ -75,12 +115,111 @@ def quantized_coding_bits(q: jax.Array, d: int, value_bits: float,
     """
     logd = jnp.log2(jnp.asarray(float(d)))
     nnz = jnp.sum((jnp.abs(q.reshape(-1)) > 0).astype(jnp.float32))
-    listed = nnz * (value_bits + logd)
-    dense_map = float(d) * dense_map_bits
-    return jnp.minimum(listed, dense_map) + header_bits
+    return hybrid_branch_bits(nnz, d, value_bits + logd,
+                              dense_map_bits) + header_bits
 
 
 def qsgd_coding_bits(d: int, bits: int) -> float:
     """QSGD cost model used in the paper's Figures 5-6: T*M*b per element -> d*bits
     per message (plus one norm float, which the paper's model folds in)."""
     return float(d) * bits
+
+
+# ---------------------------------------------------------------------------
+# Realized wire accounting (the WireLayout side of the model)
+# ---------------------------------------------------------------------------
+
+def bitmap_word_bits(d: int) -> float:
+    """Bits of a d-coordinate occupancy bitmap packed into whole words —
+    the realized (word-rounded) form of the section-3.3 dense-map branch
+    at 1 bit per coordinate, computed from the packer's own word count."""
+    return float(bitmap_words(d) * WORD_BITS)
+
+
+def realized_wire_bits(layout: str, k_cap: int, d: int,
+                       value_bits: float) -> float:
+    """Bits one leaf's message actually puts on the collective under a
+    WireLayout, per layer. ``value_bits`` is the *wire* width of one value
+    slot (8 * itemsize of the codec wire dtype — not the coding model's b).
+
+      coo    -- k_cap value slots + k_cap int32 coordinates
+      bitmap -- k_cap value slots (coordinate-ordered) + a packed d-bit
+                occupancy map in int32 words
+      dense  -- d value slots in coordinate order, index stream elided
+
+    Static (trace-time) Python arithmetic: the layout choice must be
+    resolvable before any buffer is built.
+    """
+    if layout == "coo":
+        return float(k_cap) * (value_bits + INDEX_BITS)
+    if layout == "bitmap":
+        return float(k_cap) * value_bits + bitmap_word_bits(d)
+    if layout == "dense":
+        return float(d) * value_bits
+    raise ValueError(f"unknown wire layout {layout!r}; "
+                     "have ('coo', 'bitmap', 'dense')")
+
+
+# ---------------------------------------------------------------------------
+# Off-wire entropy estimators for the index stream (bench accounting only —
+# nothing below ships on a collective; see ROADMAP's Elias/Golomb item)
+# ---------------------------------------------------------------------------
+
+def _index_gaps(idx, d: int) -> np.ndarray:
+    """Sorted-coordinate delta sequence, every gap >= 1 (first index is
+    delta-coded against -1)."""
+    a = np.unique(np.asarray(idx, dtype=np.int64).reshape(-1))
+    if a.size == 0:
+        return np.zeros((0,), np.int64)
+    if a[0] < 0 or a[-1] >= d:
+        raise ValueError(f"index out of range [0, {d}): {a[0]}..{a[-1]}")
+    return np.diff(a, prepend=-1)
+
+
+def elias_gamma_bits(gaps) -> float:
+    """Total Elias-gamma code length of positive integers: 2*floor(log2 g) + 1
+    bits each — parameter-free, good when gaps are small and skewed."""
+    g = np.asarray(gaps, dtype=np.int64).reshape(-1)
+    if g.size == 0:
+        return 0.0
+    if np.any(g < 1):
+        raise ValueError("Elias-gamma codes positive integers only")
+    return float(np.sum(2 * np.floor(np.log2(g)) + 1))
+
+
+def golomb_bits(gaps, m: int | None = None) -> float:
+    """Total Golomb code length of the gap sequence (coded as gap-1 >= 0):
+    unary quotient (q+1 bits) + truncated-binary remainder. ``m=None`` picks
+    the geometric-optimal parameter m ~= 0.69 * mean(gap) — the classic
+    inverted-index choice, near-optimal for Bernoulli-selected coordinates."""
+    g = np.asarray(gaps, dtype=np.int64).reshape(-1)
+    if g.size == 0:
+        return 0.0
+    if np.any(g < 1):
+        raise ValueError("Golomb gaps must be positive")
+    if m is None:
+        m = max(1, int(round(0.69 * float(np.mean(g)))))
+    x = g - 1
+    q = x // m
+    r = x % m
+    b = max(1, math.ceil(math.log2(m))) if m > 1 else 0
+    if m == 1:
+        r_bits = np.zeros_like(r)
+    else:
+        cutoff = (1 << b) - m          # remainders below this take b-1 bits
+        r_bits = np.where(r < cutoff, b - 1, b)
+    return float(np.sum(q + 1 + r_bits))
+
+
+def delta_coded_index_bits(idx, d: int, method: str = "golomb") -> float:
+    """Entropy-coded size estimate of one message's index stream: sort the
+    realized coordinates, delta-code the gaps with Golomb or Elias-gamma.
+    This is the bench_wire "entropy bytes" column — an off-wire estimate of
+    what the int32 stream (``realized_wire_bits``) could shrink to, toward
+    the paper's H[Q(g)]."""
+    gaps = _index_gaps(idx, d)
+    if method == "golomb":
+        return golomb_bits(gaps)
+    if method == "elias":
+        return elias_gamma_bits(gaps)
+    raise ValueError(f"unknown method {method!r}; have ('golomb', 'elias')")

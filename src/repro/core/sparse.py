@@ -69,6 +69,15 @@ class SparseGrad:
     d: int = dataclasses.field(metadata=dict(static=True), default=0)
     shape: tuple = dataclasses.field(metadata=dict(static=True), default=())
     codec: str = dataclasses.field(metadata=dict(static=True), default="f32")
+    layout: str = dataclasses.field(metadata=dict(static=True), default="coo")
+                             # wire layout (repro.comm.wire_layout): how the
+                             # bucketed collective ships this leaf — picked
+                             # statically from (k_cap, d, wire width)
+    idx_sorted: bool = dataclasses.field(metadata=dict(static=True),
+                                         default=False)
+                             # valid-prefix slots ascend by coordinate (the
+                             # pallas counting compaction); lets the bitmap
+                             # layout pack without an argsort
 
     @property
     def k_cap(self) -> int:
@@ -90,6 +99,15 @@ class SparseGrad:
         if self.values.ndim == 2:        # stacked: per-layer scale
             return jax.vmap(codec.decode)(self.values, self.scale)
         return codec.decode(self.values, self.scale)
+
+    def realized_wire_bits(self) -> float:
+        """Static bits this leaf's message puts on the collective under its
+        stamped layout (values + index words; per-message scales are
+        accounted by the sync layer alongside their own gather)."""
+        layers = self.values.shape[0] if self.values.ndim == 2 else 1
+        vb = float(jnp.dtype(self.values.dtype).itemsize * 8)
+        return layers * coding.realized_wire_bits(self.layout, self.k_cap,
+                                                  self.d, vb)
 
     def densify(self) -> jax.Array:
         """Dense reconstruction (modulo overflow drops), original shape."""
@@ -142,6 +160,17 @@ def _residual_from_buffers(g: jax.Array, sg: SparseGrad) -> jax.Array:
     return res.reshape(g.shape)
 
 
+def _choose_layout(cfg, codec, leaf_dtype, k_cap: int, d: int) -> str:
+    """Static wire-layout stamp for one leaf (per layer): min realized
+    bytes over coo/bitmap/dense, or the config's forced override."""
+    # lazy import: repro.comm.wire_layout pulls repro.core.coding — at
+    # module level this could cycle depending on which package loads first.
+    from repro.comm import wire_layout
+    return wire_layout.choose(
+        k_cap, d, wire_layout.value_bits_of(codec.wire_dtype(leaf_dtype)),
+        cfg.wire_layout)
+
+
 class ReferenceBackend:
     """The scheme's dense-layout pipeline + a single magnitude top_k per
     leaf. Shares the dense wire's computation, hence bit-identical to it."""
@@ -168,7 +197,9 @@ class ReferenceBackend:
         return SparseGrad(values=wire_vals, idx=idx, nnz=nnz,
                           p_sum=jnp.sum(p), bits=cg.bits,
                           var_ratio=cg.var_ratio, scale=scale, d=g.size,
-                          shape=tuple(g.shape), codec=codec.name)
+                          shape=tuple(g.shape), codec=codec.name,
+                          layout=_choose_layout(cfg, codec, g.dtype, k_cap,
+                                                g.size))
 
     def _topk_fast(self, cfg, scheme, g, k_cap) -> SparseGrad:
         codec = scheme.codec
@@ -198,7 +229,9 @@ class ReferenceBackend:
                           p_sum=jnp.asarray(float(k_target), jnp.float32),
                           bits=jnp.asarray(bits, jnp.float32),
                           var_ratio=var, d=d, shape=tuple(g.shape),
-                          codec=codec.name)
+                          codec=codec.name,
+                          layout=_choose_layout(cfg, codec, flat.dtype,
+                                                k_cap, d))
 
     def compress_sparse_ef(self, cfg, key, g, k_cap):
         sg = self.compress_sparse(cfg, key, g, k_cap)
@@ -312,7 +345,11 @@ class PallasBackend:
             bits = n_a * (vb + logd) + jnp.minimum(2.0 * d, n_b * logd) + vb
         return SparseGrad(values=vals, idx=idx, nnz=nnz, p_sum=jnp.sum(p),
                           bits=bits, var_ratio=var, scale=scale, d=d,
-                          shape=tuple(g.shape), codec=codec.name)
+                          shape=tuple(g.shape), codec=codec.name,
+                          layout=_choose_layout(cfg, codec, g.dtype,
+                                                vals.shape[-1], d),
+                          idx_sorted=True)  # counting compaction: the valid
+                                            # prefix ascends by coordinate
 
 
 def resolve_backend(name: str, interpret: bool | None = None) -> Backend:

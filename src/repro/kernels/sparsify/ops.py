@@ -137,6 +137,11 @@ def gspar_sparse(g: jax.Array, u: jax.Array, k_cap: int, rho: float = 0.1,
     Padding slots carry idx 0 with value exactly 0, so scatter-add
     reconstruction is unaffected.
 
+    The ascending-coordinate order of the valid prefix is a load-bearing
+    contract (``SparseGrad.idx_sorted``): the BITMAP wire layout packs
+    these buffers without an argsort (``compaction.bitmap_pack(nnz=...)``),
+    keeping the fused path's wire prep O(k_cap).
+
     ``out_dtype`` (static) is the value codec's wire dtype: the fused
     sample pass quantizes kept values on its way out of VMEM, so e.g. the
     bf16 codec costs no extra traversal.

@@ -50,6 +50,11 @@ def main(argv=None):
     ap.add_argument("--rho", type=float, default=0.05)
     ap.add_argument("--wire", default="dense",
                     choices=["dense", "gather", "packed"])
+    ap.add_argument("--wire-layout", default="auto",
+                    choices=["auto", "coo", "bitmap", "dense"],
+                    help="sparse-wire bucket layout per leaf (auto = min "
+                         "realized bytes: COO index list, packed occupancy "
+                         "bitmap, or index-elided dense value run)")
     ap.add_argument("--error-feedback", action="store_true",
                     help="carry the per-worker compression residual "
                          "(memory: one params-sized buffer per worker)")
@@ -93,10 +98,12 @@ def main(argv=None):
     opt_state = opt.init(params)
     comp = CompressionConfig(name=args.compressor, codec=args.codec,
                              qsgd_bits=args.qsgd_bits, rho=args.rho,
-                             wire=args.wire, backend=args.backend,
+                             wire=args.wire, wire_layout=args.wire_layout,
+                             backend=args.backend,
                              error_feedback=args.error_feedback,
                              min_leaf_size=1024)
-    print(f"compression: {comp.scheme().name} wire={comp.wire}")
+    print(f"compression: {comp.scheme().name} wire={comp.wire} "
+          f"layout={comp.wire_layout}")
     ef_state = None
     if comp.error_feedback:
         # compressed mode: stacked per-worker residual; fsdp: params-shaped

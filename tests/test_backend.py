@@ -260,7 +260,13 @@ class TestPackedWire:
                 out_specs=(P(), P()), axis_names={"data"},
                 check_vma=False))(jax.random.key(0), g)
         k_cap = compaction.capacity_for(1 << 13, cfg.rho, 4.0)
-        assert float(wire) == k_cap * (2 + 4)    # bf16 values + i32 idx
+        # bf16 value slots under the min-bytes wire layout (bitmap at this
+        # density: 2-byte values + the packed d-bit occupancy words)
+        from repro.core import coding
+        expect = min(coding.realized_wire_bits(lay, k_cap, 1 << 13, 16)
+                     for lay in ("coo", "bitmap", "dense")) / 8
+        assert expect == k_cap * 2 + (1 << 13) // 8
+        assert float(wire) == expect
 
     def test_gather_wire_preserves_leaf_dtype_bytes(self):
         cfg = CompressionConfig(name="gspar", rho=0.1, wire="gather",

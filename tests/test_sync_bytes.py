@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import compaction
-from repro.core import sparsify
+from repro.comm import compaction, wire_layout
+from repro.core import coding, sparsify
 
 
 def test_capacity_rounding():
@@ -47,3 +47,22 @@ def test_gather_wire_bytes_beat_dense_at_scale():
     gather_bytes = k_cap * (4 + 4)          # f32 val + i32 idx per slot
     dense_ring_bytes = 2 * d * 4            # ring all-reduce moves ~2d words
     assert gather_bytes * 8 < dense_ring_bytes   # >8x reduction at rho=1%
+
+
+def test_layout_bytes_at_scale():
+    """Wire-format v2 at 1M coords: COO stays optimal in the paper's rho=1%
+    regime, the bitmap takes over by rho=10%, and a full-capacity int8
+    message (terngrad-style) ships at d bytes + scale — 4x under the dense
+    psum's f32, with zero index overhead."""
+    d = 1 << 20
+    k1 = compaction.capacity_for(d, 0.01)
+    assert wire_layout.choose(k1, d, 32) == "coo"
+    k10 = compaction.capacity_for(d, 0.10)
+    assert wire_layout.choose(k10, d, 32) == "bitmap"
+    saved = (coding.realized_wire_bits("coo", k10, d, 32)
+             - coding.realized_wire_bits("bitmap", k10, d, 32))
+    assert saved >= k10 * 32 - d - 32          # ~the whole int32 idx stream
+    assert wire_layout.choose(d, d, 8) == "dense"
+    assert coding.realized_wire_bits("dense", d, d, 8) == d * 8
+    # the census a bucket of one such leaf reports to SyncStats
+    assert coding.realized_wire_bits("dense", d, d, 8) / 8 < d * 4 / 2

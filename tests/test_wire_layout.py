@@ -1,0 +1,361 @@
+"""Wire-format v2 (self-describing bucket layouts) tests:
+
+  * the static chooser is argmin: realized layout bytes = min(COO, BITMAP,
+    DENSE) for every (k_cap, d, wire width) — by construction, pinned here
+  * bitmap pack/unpack round-trips exactly (flat, stacked, word-boundary
+    and sign-bit coordinates, d not a multiple of 32)
+  * dense-vs-gather stays bit-identical under EVERY layout (auto + all
+    three forced), for sparse, quantized, and full-capacity compositions
+  * full-capacity quantized compositions (identity∘qsgd8, bernoulli∘
+    ternary and their legacy aliases) realize strictly fewer gather bytes
+    than the dense psum — the ROADMAP caveat this subsystem closes
+  * SyncStats.wire_bytes under layout=auto equals the min over forced
+    layouts and matches the static per-leaf accounting
+  * the off-wire Golomb/Elias-gamma index-stream estimators
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import compaction, wire_layout
+from repro.core import coding
+from repro.core.api import CompressionConfig, compress_tree_sparse
+from repro.comm.sync import sync_tree
+
+LAYOUTS = ("coo", "bitmap", "dense")
+
+
+def _grad_tree(seed):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal(4096)
+                         * np.exp(rng.standard_normal(4096)), jnp.float32),
+        "stack": jnp.asarray(rng.standard_normal((3, 2048)), jnp.float32),
+        "tiny": jnp.asarray(rng.standard_normal(16), jnp.float32),
+    }
+
+
+STACKED = {"w": False, "stack": True, "tiny": False}
+
+
+def _sync(cfg, key, grads):
+    mesh = jax.make_mesh((1,), ("data",))
+
+    def step(k, g):
+        synced, _, stats = sync_tree(cfg, k, g, data_axis="data",
+                                     stacked=STACKED)
+        return synced, stats
+
+    with jax.set_mesh(mesh):
+        fn = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P(), P()),
+                                   out_specs=(P(), P()), axis_names={"data"},
+                                   check_vma=False))
+        return fn(key, grads)
+
+
+# ---------------------------------------------------------------------------
+# Chooser: argmin of realized bytes, by construction and by property sweep
+# ---------------------------------------------------------------------------
+
+class TestChooser:
+    def test_choose_is_argmin_over_realized_bits(self):
+        """Property: for every (k_cap, d, wire width) the chosen layout's
+        realized bits equal min(COO, BITMAP, DENSE)."""
+        rng = np.random.default_rng(0)
+        for _ in range(300):
+            d = int(rng.integers(32, 1 << 20))
+            k_cap = int(rng.integers(1, d + 1))
+            vb = float(rng.choice([8, 16, 32]))
+            costs = {l: coding.realized_wire_bits(l, k_cap, d, vb)
+                     for l in LAYOUTS}
+            chosen = wire_layout.choose(k_cap, d, vb)
+            assert costs[chosen] == min(costs.values()), \
+                (k_cap, d, vb, chosen, costs)
+
+    def test_regime_boundaries(self):
+        """The paper's branch rule realized with 32-bit words: full
+        capacity elides the index; above ~d/32 live slots the bitmap beats
+        the COO list; sparse tails stay COO."""
+        d = 1 << 16
+        assert wire_layout.choose(d, d, 32) == "dense"       # k_cap = d
+        assert wire_layout.choose(d, d, 8) == "dense"        # qsgd/terngrad
+        assert wire_layout.choose(d // 4, d, 32) == "bitmap"  # 25% density
+        assert wire_layout.choose(128, d, 32) == "coo"       # 0.2% density
+        # word-exact crossover: COO index bits = k*32, bitmap = d bits
+        assert wire_layout.choose(d // 32 + 1, d, 32) == "bitmap"
+
+    def test_override_forces_layout(self):
+        assert wire_layout.choose(128, 1 << 16, 32, "dense") == "dense"
+        with pytest.raises(ValueError, match="unknown wire layout"):
+            wire_layout.choose(128, 1 << 16, 32, "golomb")
+
+    def test_config_validates_layout_name(self):
+        with pytest.raises(ValueError, match="unknown wire layout"):
+            CompressionConfig(name="gspar", wire="gather",
+                              wire_layout="golomb")
+
+
+# ---------------------------------------------------------------------------
+# Bitmap index coding primitives
+# ---------------------------------------------------------------------------
+
+class TestBitmapRoundtrip:
+    @pytest.mark.parametrize("d", [64, 100, 128, 1000, 4096])
+    def test_pack_select_roundtrip_exact(self, d):
+        rng = np.random.default_rng(d)
+        q = np.zeros(d, np.float32)
+        nz = rng.choice(d, max(1, d // 7), replace=False)
+        q[nz] = rng.standard_normal(nz.size).astype(np.float32)
+        q[nz[0]] = 1.5                       # ensure at least one live value
+        k_cap = min(d, max(128, -(-nz.size // 128) * 128))
+        vals, idx, _ = compaction.compact(jnp.asarray(q), k_cap)
+        svals, words = compaction.bitmap_pack(vals, idx, d)
+        assert words.dtype == jnp.int32 and words.shape[0] == -(-d // 32)
+        rec = compaction.bitmap_select(words, svals, d)
+        np.testing.assert_array_equal(np.asarray(rec), q)
+
+    def test_sign_bit_and_word_boundary_coordinates(self):
+        """Coordinates 31/63 land on int32 sign bits; 32 starts word 1;
+        d-1 of a non-multiple-of-32 d lives in the ragged last word."""
+        d = 70
+        q = np.zeros(d, np.float32)
+        for c in (0, 31, 32, 63, 69):
+            q[c] = float(c + 1)
+        vals, idx, _ = compaction.compact(jnp.asarray(q), 64)
+        svals, words = compaction.bitmap_pack(vals, idx, d)
+        rec = compaction.bitmap_select(words, svals, d)
+        np.testing.assert_array_equal(np.asarray(rec), q)
+
+    def test_integer_values_and_dead_slots(self):
+        """Codec-zeroed int8 slots (level 0) must carry no bit; live levels
+        survive in coordinate order."""
+        d = 96
+        vals = jnp.asarray([3, 0, -2, 0, 1, 0], jnp.int8)
+        idx = jnp.asarray([90, 1, 4, 2, 31, 3], jnp.int32)
+        svals, words = compaction.bitmap_pack(vals, idx, d)
+        rec = np.asarray(compaction.bitmap_select(words, svals, d))
+        expect = np.zeros(d, np.int8)
+        expect[90], expect[4], expect[31] = 3, -2, 1
+        np.testing.assert_array_equal(rec, expect)
+
+    def test_sorted_path_matches_generic_with_codec_zeroed_levels(self):
+        """The argsort-free pack (counting-compacted buffers + nnz) must
+        reconstruct identically to the generic path even when an integer
+        codec zeroed a mid-prefix level: the zeroed coordinate's bit simply
+        decodes to exact zero."""
+        d = 100
+        # ascending valid prefix (nnz=4) with a codec-zeroed level at idx 33,
+        # then counting-compaction padding (idx 0, value 0)
+        vals = jnp.asarray([5, -1, 0, 7, 0, 0], jnp.int8)
+        idx = jnp.asarray([2, 31, 33, 64, 0, 0], jnp.int32)
+        nnz = jnp.asarray(4, jnp.int32)
+        sv_g, w_g = compaction.bitmap_pack(vals, idx, d)
+        sv_s, w_s = compaction.bitmap_pack(vals, idx, d, nnz=nnz)
+        rec_g = np.asarray(compaction.bitmap_select(w_g, sv_g, d))
+        rec_s = np.asarray(compaction.bitmap_select(w_s, sv_s, d))
+        np.testing.assert_array_equal(rec_g, rec_s)
+        expect = np.zeros(d, np.int8)
+        expect[2], expect[31], expect[64] = 5, -1, 7
+        np.testing.assert_array_equal(rec_s, expect)
+
+    def test_pallas_counting_buffers_pack_sort_free(self):
+        """The fused backend stamps idx_sorted; its bitmap wire message
+        must reconstruct exactly what densify() reconstructs."""
+        from repro.core import codecs as codecs_lib
+        rng = np.random.default_rng(23)
+        g = {"w": jnp.asarray(rng.standard_normal(1 << 14)
+                              * np.exp(rng.standard_normal(1 << 14)),
+                              jnp.float32)}
+        cfg = CompressionConfig(name="gspar+qsgd8", rho=0.2,
+                                capacity_slack=2.0, wire="gather",
+                                min_leaf_size=8, backend="pallas")
+        items, _, _, _ = compress_tree_sparse(cfg, jax.random.key(2), g)
+        (_, sg), = items
+        assert sg.idx_sorted and sg.layout == "bitmap"
+        lp = wire_layout.plan(sg)
+        v, w = wire_layout.pack(sg, lp)
+        dec = codecs_lib.get(sg.codec).decode(v[0], sg.scale)
+        rec = compaction.bitmap_select(w[0], dec, sg.d)
+        np.testing.assert_array_equal(np.asarray(rec),
+                                      np.asarray(sg.densify()).reshape(-1))
+
+    def test_stacked_roundtrip_via_vmap(self):
+        rng = np.random.default_rng(5)
+        d, layers = 512, 4
+        q = np.where(rng.random((layers, d)) < 0.1,
+                     rng.standard_normal((layers, d)), 0.0).astype(np.float32)
+        vals, idx, _ = jax.vmap(lambda row: compaction.compact(row, 128))(
+            jnp.asarray(q))
+        svals, words = jax.vmap(
+            lambda v, i: compaction.bitmap_pack(v, i, d))(vals, idx)
+        rec = compaction.bitmap_select(words, svals, d)
+        np.testing.assert_array_equal(np.asarray(rec), q)
+
+
+# ---------------------------------------------------------------------------
+# Dense-vs-gather bit-identity under every layout (the wire-v2 contract)
+# ---------------------------------------------------------------------------
+
+class TestLayoutWireEquivalence:
+    @pytest.mark.parametrize("name", ["gspar", "gspar+qsgd8", "terngrad",
+                                      "qsgd", "identity+qsgd8", "unisp",
+                                      "topk+ternary"])
+    @pytest.mark.parametrize("layout", ["auto", "coo", "bitmap", "dense"])
+    def test_dense_vs_gather_bit_identical(self, name, layout):
+        grads = _grad_tree(0)
+        key = jax.random.key(3)
+        kw = dict(rho=0.05, min_leaf_size=64, backend="reference",
+                  capacity_slack=4.0)
+        ref, _ = _sync(CompressionConfig(name=name, wire="dense", **kw),
+                       key, grads)
+        got, stats = _sync(CompressionConfig(name=name, wire="gather",
+                                             wire_layout=layout, **kw),
+                           key, grads)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+        assert float(stats.wire_bytes) > 0
+
+    def test_auto_realizes_min_bytes_per_bucket(self):
+        """SyncStats.wire_bytes under auto == min over the forced layouts
+        == the static per-leaf accounting (realized layout bytes =
+        min(COO, BITMAP, DENSE) per bucket)."""
+        grads = _grad_tree(1)
+        key = jax.random.key(5)
+        kw = dict(name="gspar+qsgd8", rho=0.05, min_leaf_size=64,
+                  backend="reference", capacity_slack=4.0, wire="gather")
+        by_layout = {}
+        for layout in ("auto",) + LAYOUTS:
+            _, stats = _sync(
+                CompressionConfig(wire_layout=layout, **kw), key, grads)
+            by_layout[layout] = float(stats.wire_bytes)
+        assert by_layout["auto"] == min(by_layout[l] for l in LAYOUTS)
+
+        # and the static accounting reproduces the measured bytes exactly:
+        # per-leaf realized_wire_bits + one f32 scale per message + the
+        # tiny-leaf f32 psum
+        cfg = CompressionConfig(wire_layout="auto", **kw)
+        items, _, _, _ = compress_tree_sparse(cfg, key, grads,
+                                              stacked=STACKED)
+        expect = 0.0
+        for kind, p in items:
+            if kind == "dense":
+                expect += p.size * 4
+            else:
+                layers = p.values.shape[0] if p.values.ndim == 2 else 1
+                expect += p.realized_wire_bits() / 8 + 4 * layers
+        assert by_layout["auto"] == pytest.approx(expect)
+
+    def test_error_feedback_bit_identical_on_bitmap_layout(self):
+        """EF residuals are computed upstream of the wire layout; forcing
+        bitmap must keep params AND residual equal to the dense wire's."""
+        grads = _grad_tree(2)
+        key = jax.random.key(9)
+        res0 = jax.tree.map(jnp.zeros_like, grads)
+        mesh = jax.make_mesh((1,), ("data",))
+
+        def run(cfg):
+            def step(k, g, r):
+                return sync_tree(cfg, k, g, data_axis="data",
+                                 stacked=STACKED, residual=r)
+            with jax.set_mesh(mesh):
+                fn = jax.jit(jax.shard_map(
+                    step, mesh=mesh, in_specs=(P(), P(), P()),
+                    out_specs=(P(), P(), P()), axis_names={"data"},
+                    check_vma=False))
+                return fn(key, grads, res0)
+
+        kw = dict(name="gspar+qsgd8", rho=0.05, min_leaf_size=64,
+                  backend="reference", capacity_slack=4.0,
+                  error_feedback=True)
+        sd, rd, _ = run(CompressionConfig(wire="dense", **kw))
+        sg, rg, _ = run(CompressionConfig(wire="gather",
+                                          wire_layout="bitmap", **kw))
+        for a, b in zip(jax.tree.leaves((sd, rd)), jax.tree.leaves((sg, rg))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Full-capacity compositions beat the dense psum (the ROADMAP closure)
+# ---------------------------------------------------------------------------
+
+class TestIndexElision:
+    @pytest.mark.parametrize("name", ["identity+qsgd8", "bernoulli+ternary",
+                                      "qsgd", "terngrad"])
+    def test_full_capacity_beats_dense_wire_bytes(self, name):
+        grads = _grad_tree(3)
+        key = jax.random.key(11)
+        kw = dict(rho=0.05, min_leaf_size=64, backend="reference")
+        _, dense_stats = _sync(CompressionConfig(name=name, wire="dense",
+                                                 **kw), key, grads)
+        _, stats = _sync(CompressionConfig(name=name, wire="gather", **kw),
+                         key, grads)
+        assert float(stats.wire_bytes) < float(dense_stats.wire_bytes), name
+
+    def test_layout_stamps_per_regime(self):
+        grads = {"w": _grad_tree(4)["w"]}
+        key = jax.random.key(13)
+
+        def stamp(cfg):
+            items, _, _, _ = compress_tree_sparse(cfg, key, grads)
+            (_, sg), = items
+            return sg.layout
+
+        base = dict(wire="gather", min_leaf_size=8, backend="reference")
+        assert stamp(CompressionConfig(name="identity+qsgd8",
+                                       **base)) == "dense"
+        assert stamp(CompressionConfig(name="terngrad", **base)) == "dense"
+        assert stamp(CompressionConfig(name="gspar", rho=0.005,
+                                       **base)) == "coo"
+        assert stamp(CompressionConfig(name="gspar", rho=0.2,
+                                       capacity_slack=2.0, **base)) == "bitmap"
+
+    def test_sparsegrad_accounting_matches_coding(self):
+        grads = {"w": _grad_tree(6)["w"]}
+        cfg = CompressionConfig(name="gspar", rho=0.2, capacity_slack=2.0,
+                                wire="gather", min_leaf_size=8,
+                                backend="reference")
+        items, _, _, _ = compress_tree_sparse(cfg, jax.random.key(1), grads)
+        (_, sg), = items
+        assert sg.realized_wire_bits() == coding.realized_wire_bits(
+            sg.layout, sg.k_cap, sg.d, sg.values.dtype.itemsize * 8)
+
+
+# ---------------------------------------------------------------------------
+# Off-wire entropy estimators (the bench_wire entropy-bytes column)
+# ---------------------------------------------------------------------------
+
+class TestIndexEntropyEstimators:
+    def test_elias_gamma_hand_values(self):
+        # gamma(1)=1 bit, gamma(2..3)=3, gamma(4..7)=5
+        assert coding.elias_gamma_bits([1]) == 1.0
+        assert coding.elias_gamma_bits([2, 3]) == 6.0
+        assert coding.elias_gamma_bits([4, 7]) == 10.0
+        assert coding.elias_gamma_bits([]) == 0.0
+
+    def test_golomb_m1_is_unary(self):
+        # m=1: gap g costs g bits (unary quotient of g-1, plus the stop bit)
+        assert coding.golomb_bits([1, 2, 3], m=1) == 6.0
+
+    def test_golomb_truncated_binary_remainder(self):
+        # m=3, b=2, cutoff=1: x=0 -> q=0,r=0 -> 1+1 bits; x=1 -> 1+2;
+        # x=2 -> 1+2; x=3 -> q=1 -> 2+1
+        assert coding.golomb_bits([1], m=3) == 2.0
+        assert coding.golomb_bits([2], m=3) == 3.0
+        assert coding.golomb_bits([4], m=3) == 3.0
+
+    def test_delta_coding_undercuts_int32_on_dense_draws(self):
+        """At >3% density the delta-coded stream must be far below 32 bits
+        per index — the headroom the ROADMAP's entropy-coding item cashes."""
+        rng = np.random.default_rng(7)
+        d = 1 << 16
+        idx = np.sort(rng.choice(d, d // 24, replace=False))
+        for method in ("golomb", "elias"):
+            bits = coding.delta_coded_index_bits(idx, d, method)
+            assert bits < 0.5 * 32 * idx.size, (method, bits)
+
+    def test_delta_coding_validates_range(self):
+        with pytest.raises(ValueError, match="out of range"):
+            coding.delta_coded_index_bits([5, 100], 64)
