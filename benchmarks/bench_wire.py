@@ -11,12 +11,18 @@ scan-over-layers stack, a handful of tiny vectors):
     coding-model bits, density;
   * wire bytes actually moved per step (SyncStats accounting), the coding-
     model message bits, and realized density;
-  * per-composition wire-format-v2 accounting, side by side: coding-model
-    bits, realized layout bytes (the statically chosen COO / bitmap /
-    index-elided dense layout per leaf, `repro.comm.wire_layout`), and the
-    off-wire Golomb delta-coded estimate of the index stream — asserting
-    that identity+qsgd8 and bernoulli+ternary now ride the gather wire
-    strictly below the dense psum's bytes (the old ROADMAP caveat);
+  * per-composition wire-format-v2/v3 accounting, side by side: coding-
+    model bits, realized layout bytes (the statically chosen COO / bitmap
+    / index-elided dense / Rice-coded layout per leaf,
+    `repro.comm.wire_layout` — true encoded lengths for RICE leaves, which
+    must reproduce the measured SyncStats.wire_bytes exactly), and the
+    REALIZED cost of forcing every sparse leaf onto the RICE branch (the
+    former off-wire Golomb estimator column, now the realized bytes of the
+    fourth layout: encoder word geometry + phase-one counts) — asserting
+    that identity+qsgd8 and bernoulli+ternary ride the gather wire
+    strictly below the dense psum's bytes (the old ROADMAP caveat) and
+    that at least one composition ships entropy-coded indices as its
+    argmin layout;
   * bit-consistency of the pallas backend (interpret mode on CPU) against
     the pure-jnp reference of the same fused pipeline on the pregenerated-
     uniforms path — asserted, not just reported.
@@ -49,12 +55,15 @@ COMPOSED_SCHEMES = ("gspar", "gspar+bf16", "gspar+qsgd8", "topk+ternary",
 DENSE_BEATERS = ("identity+qsgd8", "bernoulli+ternary", "terngrad", "qsgd")
 
 
-def _wire_v2_accounting(items):
+def _wire_v3_accounting(items):
     """Offline wire-format accounting for one composition's sparse items:
     realized layout bytes (what the bucketed collective ships under the
-    stamped layouts, incl. per-message scales), the Golomb delta-coded
-    entropy estimate of the same messages (live values + coded index gaps),
-    and the per-layout leaf census."""
+    stamped layouts — true encoded lengths + phase-one counts for RICE
+    leaves, static stream sizes otherwise, incl. per-message scales), the
+    REALIZED cost of forcing every sparse leaf onto the RICE branch (the
+    entropy-coded column: since wire-format v3 this is the realized fourth
+    layout, word geometry and counts included, not an idealized
+    estimator), and the per-layout leaf census."""
     from repro.core import codecs as codecs_lib
     from repro.core import coding
 
@@ -67,17 +76,22 @@ def _wire_v2_accounting(items):
             entropy_bytes += p.size * 4
             continue
         layouts[p.layout] = layouts.get(p.layout, 0) + 1
-        layout_bytes += p.realized_wire_bits() / 8
         has_scale = codecs_lib.get(p.codec).has_scale
         vals = np.asarray(p.values)
         idxs = np.asarray(p.idx)
         if vals.ndim == 1:
             vals, idxs = vals[None], idxs[None]
+        if p.layout != "rice":
+            layout_bytes += p.realized_wire_bits() / 8
         for v, ix in zip(vals, idxs):         # per layer
             live = v != 0
-            entropy_bytes += (int(live.sum()) * v.dtype.itemsize
-                              + coding.delta_coded_index_bits(ix[live],
-                                                              p.d) / 8)
+            rice_bytes = (p.k_cap * v.dtype.itemsize             # values
+                          + coding.rice_stream_words(ix[live], p.k_cap,
+                                                     p.d) * 4   # payload
+                          + 4)                                  # count word
+            entropy_bytes += rice_bytes
+            if p.layout == "rice":
+                layout_bytes += rice_bytes
             if has_scale:
                 layout_bytes += 4
                 entropy_bytes += 4
@@ -168,6 +182,7 @@ def run(quick: bool = False, return_payload: bool = False):
     # composed-scheme matrix: every selector∘codec composition on the
     # dense and gather wires (reference backend) — the bytes/bits shape of
     # the compression zoo after the composable-compression refactor.
+    items_by_scheme: dict = {}       # reused by the v3 acceptance loop
     for scheme in COMPOSED_SCHEMES:
         for wire in ("dense", "gather"):
             cfg = CompressionConfig(name=scheme, rho=rho, wire=wire,
@@ -197,17 +212,23 @@ def run(quick: bool = False, return_payload: bool = False):
                 "overflow": float(stats.overflow),
             }
             if wire == "gather":
-                # wire-format-v2 columns, side by side with the coding
-                # model: realized layout bytes + Golomb-coded estimate of
-                # the SAME message the measured sync just shipped —
+                # wire-format-v2/v3 columns, side by side with the coding
+                # model: realized layout bytes + the realized forced-RICE
+                # cost of the SAME message the measured sync just shipped —
                 # sync_tree folds the worker index into the key, which on
                 # this 1-device data axis is fold_in(key, 0).
                 worker_key = jax.random.fold_in(jax.random.key(7), 0)
                 items, _, _, _ = compress_tree_sparse(cfg, worker_key, grads)
-                lb, eb, lay = _wire_v2_accounting(items)
+                items_by_scheme[scheme] = items
+                lb, eb, lay = _wire_v3_accounting(items)
                 rec["layout_bytes"] = lb
                 rec["entropy_bytes"] = eb
                 rec["layouts"] = lay
+                # realized accounting must reproduce the measured HLO
+                # bytes exactly — RICE rows prove the wire ships true
+                # encoded lengths, not estimates or padded capacities
+                assert abs(lb - rec["wire_bytes"]) < 1e-6 * max(lb, 1.0), (
+                    scheme, lb, rec["wire_bytes"])
             tag = f"scheme:{scheme}:{wire}"
             payload[tag] = rec
             extra = (f";layouts={'/'.join(sorted(rec['layouts']))};"
@@ -220,8 +241,8 @@ def run(quick: bool = False, return_payload: bool = False):
                          f"(dense={rec['dense_bits']:.3g});"
                          f"density={rec['density']:.4f}" + extra))
 
-    # the wire-format-v2 acceptance bar (also the ROADMAP caveat this
-    # closes): full-capacity quantized compositions must now move fewer
+    # the wire-format-v2 acceptance bar (also the ROADMAP caveat it
+    # closed): full-capacity quantized compositions must move fewer
     # realized bytes on the gather wire than the dense psum of the same
     # tree — the index stream is elided, not just modeled away.
     for scheme in DENSE_BEATERS:
@@ -229,6 +250,27 @@ def run(quick: bool = False, return_payload: bool = False):
         assert got < dense_bytes, (
             f"{scheme}: realized gather bytes {got:.0f} >= dense psum "
             f"{dense_bytes:.0f} — the wire-layout index elision regressed")
+
+    # the wire-format-v3 acceptance bar: at least one composition's argmin
+    # layout census includes RICE — realized (not estimated) entropy-coded
+    # index bytes on the measured collective — and those rows undercut
+    # what the same messages would have paid under the pre-v3 static
+    # argmin (min over COO/BITMAP/DENSE).
+    from repro.core import coding as coding_lib
+    rice_rows = [k for k, r in payload.items()
+                 if isinstance(r, dict) and r.get("layouts", {}).get("rice")]
+    assert rice_rows, "no composition realized the RICE layout as argmin"
+    for key_ in rice_rows:
+        rec = payload[key_]
+        items = items_by_scheme[key_.split(":")[1]]  # same cfg/key/grads
+        pre_v3 = sum(
+            p.size * 4 if kind == "dense" else
+            min(coding_lib.realized_wire_bits(lay, p.k_cap, p.d,
+                                              p.values.dtype.itemsize * 8)
+                for lay in ("coo", "bitmap", "dense")) / 8
+            for kind, p in items)
+        assert rec["wire_bytes"] < pre_v3, (key_, rec["wire_bytes"], pre_v3)
+        rec["pre_v3_bytes"] = pre_v3
 
     # solver calibration: expected density (sum of sampling probabilities,
     # SparseGrad.p_sum) vs realized nnz over the leaf set — a persistent gap

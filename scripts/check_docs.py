@@ -1,0 +1,103 @@
+"""CI lint for the markdown docs: links resolve, code blocks are honest.
+
+    python scripts/check_docs.py [FILES...]
+
+Defaults to every tracked top-level .md plus docs/. Two checks, both cheap
+(no imports of the package, no jax — this job runs on a bare python):
+
+  * every RELATIVE markdown link target exists on disk (anchors and
+    external http(s)/mailto links are skipped) — a repo map that 404s is
+    worse than none;
+  * every fenced ``python`` code block either compiles (``compile()`` —
+    a syntax check, nothing is executed) or is explicitly marked
+    non-runnable with a ``# doctest: skip`` line. Other languages
+    (bash, text, yaml) are not checked.
+
+Exit 1 with a file:line-prefixed report on any violation.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) — markdown inline links; images share the syntax
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^(\s*)```(\w*)\s*$")
+SKIP_MARK = "# doctest: skip"
+
+
+def default_files() -> list[pathlib.Path]:
+    files = sorted(REPO.glob("*.md")) + sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def check_links(path: pathlib.Path, lines: list[str]) -> list[str]:
+    errors = []
+    for ln, line in enumerate(lines, 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                errors.append(f"{path.relative_to(REPO)}:{ln}: broken "
+                              f"link target {target!r}")
+    return errors
+
+
+def check_snippets(path: pathlib.Path, lines: list[str]) -> list[str]:
+    errors = []
+    block: list[str] | None = None
+    lang = ""
+    start = 0
+    for ln, line in enumerate(lines, 1):
+        m = FENCE_RE.match(line)
+        if m and block is None:
+            block, lang, start = [], m.group(2).lower(), ln
+            continue
+        if m and block is not None:
+            if lang in ("python", "py"):
+                src = "\n".join(block)
+                if SKIP_MARK not in src:
+                    try:
+                        compile(src, f"{path.name}:{start}", "exec")
+                    except SyntaxError as e:
+                        errors.append(
+                            f"{path.relative_to(REPO)}:{start}: python "
+                            f"block does not compile ({e.msg}, line "
+                            f"{e.lineno} of the block) — fix it or mark "
+                            f"it '{SKIP_MARK}'")
+            block = None
+            continue
+        if block is not None:
+            block.append(line)
+    if block is not None:
+        errors.append(f"{path.relative_to(REPO)}:{start}: unterminated "
+                      "code fence")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    files = ([pathlib.Path(a).resolve() for a in args] if args
+             else default_files())
+    errors: list[str] = []
+    for path in files:
+        lines = path.read_text().splitlines()
+        errors += check_links(path, lines)
+        errors += check_snippets(path, lines)
+    for e in errors:
+        print(f"::error::{e}")
+    if errors:
+        print(f"\n{len(errors)} docs problem(s)", file=sys.stderr)
+        return 1
+    print(f"docs OK: {len(files)} file(s) checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

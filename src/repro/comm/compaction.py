@@ -93,37 +93,51 @@ def bitmap_words(d: int) -> int:
     return -(-d // WORD_BITS)
 
 
+def coordinate_order(vals: jax.Array, idx: jax.Array, d: int,
+                     nnz: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """The liveness/ordering rule shared by every coordinate-ordered wire
+    codec (bitmap, rice): ``(values, idx)`` compact pair -> ``(svals,
+    sidx)`` with live slots ascending by coordinate and dead slots keyed
+    to the sentinel ``d`` at the tail.
+
+    Generic path (``nnz=None``): a slot is live iff its value is nonzero
+    (compaction padding and codec-zeroed levels reconstruct to zero by
+    absence either way); one argsort orders values and keys together.
+    Live coordinates are unique by construction (one top_k / one counting
+    pass per leaf).
+
+    Sorted path (``nnz`` given): for buffers whose valid prefix
+    (``min(nnz, k_cap)`` slots) is already in ascending coordinate order
+    — the pallas counting compaction, flagged by ``SparseGrad.idx_sorted``
+    — the O(k log k) argsort is elided: values stay put and only the
+    dead tail is re-keyed. Every valid-prefix slot stays live, including
+    codec-zeroed levels: a zero value at a kept coordinate reconstructs
+    to exactly zero.
+    """
+    flat = vals.reshape(-1)
+    if nnz is None:
+        key = jnp.where(flat != 0, idx.reshape(-1), jnp.int32(d))
+        order = jnp.argsort(key)
+        return flat[order], key[order]
+    valid = (jnp.arange(flat.shape[0], dtype=jnp.int32)
+             < jnp.minimum(nnz, flat.shape[0]))
+    return flat, jnp.where(valid, idx.reshape(-1), jnp.int32(d))
+
+
 def bitmap_pack(vals: jax.Array, idx: jax.Array, d: int,
                 nnz: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
     """(values, idx) compact pair -> (coordinate-ordered values, occupancy
     words).
 
-    Generic path (``nnz=None``): slots whose value is exactly zero
-    (compaction padding, codec-zeroed levels) carry no bit and sort to the
-    tail of the value buffer, so the receiver's rank-gather
-    (``bitmap_select``) reconstructs the message exactly. Live coordinates
-    are unique by construction (one top_k / one counting pass per leaf),
-    so the word scatter-add never collides bits.
-
-    Sorted path (``nnz`` given): for buffers whose valid prefix
-    (``min(nnz, k_cap)`` slots) is already in ascending coordinate order —
-    the pallas backend's counting compaction, flagged by
-    ``SparseGrad.idx_sorted`` — the O(k log k) argsort is elided entirely.
-    Every valid-prefix slot gets a bit, including codec-zeroed levels: a
-    zero value at a mapped coordinate reconstructs to exactly zero, and
-    the fixed d-bit map costs the same either way.
+    Liveness/ordering is ``coordinate_order`` (shared with the RICE
+    codec): live slots ascend by coordinate, dead slots (generic path:
+    zero-valued; sorted path: beyond the nnz prefix) key to the sentinel
+    ``d`` and carry no bit, so the receiver's rank-gather
+    (``bitmap_select``) reconstructs the message exactly. The word
+    scatter-add never collides bits (live coordinates are unique).
     """
-    flat = vals.reshape(-1)
-    if nnz is None:
-        key = jnp.where(flat != 0, idx.reshape(-1), jnp.int32(d))  # dead last
-        order = jnp.argsort(key)
-        svals = flat[order]
-        sidx = key[order]
-    else:
-        valid = (jnp.arange(flat.shape[0], dtype=jnp.int32)
-                 < jnp.minimum(nnz, flat.shape[0]))
-        svals = flat
-        sidx = jnp.where(valid, idx.reshape(-1), jnp.int32(d))
+    svals, sidx = coordinate_order(vals, idx, d, nnz=nnz)
     word = jnp.where(sidx < d, sidx // WORD_BITS, bitmap_words(d))  # dead: drop
     bit = jnp.uint32(1) << (sidx % WORD_BITS).astype(jnp.uint32)
     words = jnp.zeros((bitmap_words(d),), jnp.uint32).at[word].add(
@@ -134,6 +148,146 @@ def bitmap_pack(vals: jax.Array, idx: jax.Array, d: int,
     return svals, jax.lax.bitcast_convert_type(words, jnp.int32)
 
 
+def _pack_bits(bits: jax.Array) -> jax.Array:
+    """Bool bit array (length a multiple of 32, LSB-first per word) ->
+    int32 words via one reshape + weighted sum; the shared word packer of
+    the BITMAP occupancy map's sibling codecs."""
+    w = bits.reshape(-1, WORD_BITS).astype(jnp.uint32)
+    words = jnp.sum(w << jnp.arange(WORD_BITS, dtype=jnp.uint32), axis=-1,
+                    dtype=jnp.uint32)
+    return jax.lax.bitcast_convert_type(words, jnp.int32)
+
+
+def _unpack_bits(words: jax.Array) -> jax.Array:
+    """int32 words [..., W] -> int32 bit array [..., W*32], LSB-first."""
+    u = jax.lax.bitcast_convert_type(words, jnp.uint32)
+    bits = (u[..., :, None] >> jnp.arange(WORD_BITS, dtype=jnp.uint32)) \
+        & jnp.uint32(1)
+    return bits.reshape(bits.shape[:-2] + (-1,)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Golomb-Rice index coding (the RICE wire layout, repro.comm.wire_layout):
+# the sorted coordinate stream is delta-coded and each gap-1 is Rice-coded
+# with a static per-leaf parameter r (repro.core.coding.rice_parameter).
+#
+# Stream layout per layer (what makes parallel fixed-shape decode possible):
+#
+#   [ k_cap fixed r-bit remainders | unary quotients | zero padding ]
+#
+# The remainder field sits at bit offset 0 with a static size (k_cap * r),
+# so the decoder slices it without knowing any code length. The unary field
+# holds the k_cap quotients as q one-bits followed by a 0 terminator each —
+# and because NO remainder bits live there, every 0-bit in the unary region
+# is a terminator: the i-th code's quotient falls out of the positions of
+# the first k_cap zero bits (a cumsum rank + one scatter), with no
+# sequential walk over code boundaries. Encoded length is data-dependent
+# (the realized wire cost) but every buffer shape is static: the word
+# capacity bounds any possible stream (rice_cap_words), and padding is
+# zeros. Everything jits, vmaps (stacked leaves), and crosses shard_map
+# boundaries like the bitmap ops above.
+# ---------------------------------------------------------------------------
+
+# Rice shifts stay inside int32 coordinate arithmetic.
+RICE_MAX_R = 30
+
+
+def rice_cap_words(k_cap: int, d: int, r: int) -> int:
+    """int32 words that bound ANY Rice-coded index stream of one layer:
+    k_cap codes pay (r + 1) fixed bits each (remainder + terminator), and
+    the unary quotient total is bounded by (d - 1) >> r — sorted unique
+    coordinates in [0, d) delta-coded against -1 sum to at most d - 1
+    after the per-code -1, and dead (padding) slots code a zero quotient.
+
+    This static bound is both the payload buffer size (the collective's
+    shape — encoding can never truncate) and the chooser's cost for the
+    RICE branch (repro.core.coding.realized_wire_bits): RICE is only
+    picked where even its worst case beats COO/BITMAP/DENSE, so realized
+    bytes can only come in under the prediction, never over.
+    """
+    return -(-(k_cap * (r + 1) + ((max(d, 1) - 1) >> r)) // WORD_BITS)
+
+
+def rice_encode(vals: jax.Array, idx: jax.Array, d: int, r: int,
+                nnz: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(values, idx) compact pair -> (coordinate-ordered values, packed
+    Rice code words [rice_cap_words], used word count).
+
+    Liveness/ordering is ``coordinate_order`` (shared with
+    ``bitmap_pack``, incl. its argsort-free sorted path for
+    ``SparseGrad.idx_sorted`` producers). Exactly k_cap gaps are coded:
+    live slots carry their sorted-coordinate delta, dead slots code gap 1
+    (quotient 0) at the tail, where the receiver masks them by their zero
+    value. The used word count is the realized wire cost of this message
+    — what the two-phase exchange's phase-one counts vector reports —
+    while the returned word buffer always has the static capacity shape,
+    zero-padded past the encoded region.
+    """
+    svals, sidx = coordinate_order(vals, idx, d, nnz=nnz)
+    k = svals.shape[0]
+    live = sidx < d
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), sidx[:-1]])
+    x = jnp.where(live, sidx - prev - 1, 0)      # gap - 1; dead slots code 0
+    q = x >> r
+    cap_words = rice_cap_words(k, d, r)
+    u_cap = cap_words * WORD_BITS - k * r
+    # remainder field: k_cap * r bits at offset 0, LSB-first per code
+    if r > 0:
+        rp = jnp.arange(k * r, dtype=jnp.int32)
+        rbits = (x[rp // r] >> (rp % r)) & 1
+    else:
+        rbits = jnp.zeros((0,), jnp.int32)
+    # unary field: q_i one-bits then a 0 terminator; terminator i lands at
+    # (inclusive cumsum q)_i + i, always within u_cap by the capacity bound
+    tpos = jnp.cumsum(q) + jnp.arange(k, dtype=jnp.int32)
+    total_unary = jnp.sum(q) + k
+    tmark = jnp.zeros((u_cap,), jnp.int32).at[tpos].set(1, mode="drop")
+    upos = jnp.arange(u_cap, dtype=jnp.int32)
+    ubits = ((upos < total_unary) & (tmark == 0)).astype(jnp.int32)
+    words = _pack_bits(jnp.concatenate([rbits, ubits]))
+    used = (jnp.int32(k * r) + total_unary + (WORD_BITS - 1)) // WORD_BITS
+    return svals, words, used.astype(jnp.int32)
+
+
+def rice_decode(words: jax.Array, k_cap: int, d: int, r: int) -> jax.Array:
+    """Decoded coordinate stream of a Rice-coded message: ``words
+    [..., W]`` (int32 code words) -> ``idx [..., k_cap]`` (int32, stream
+    order = ascending coordinate order — aligned with the coordinate-
+    ordered value buffer). Slots past the live count decode to whatever
+    the tail's zero-quotient codes cumsum to; the receiver must mask them
+    by their zero value (repro.comm.wire_layout.unpack_gathered does).
+    Batch dims are supported; everything is fixed-shape.
+    """
+    batch = words.shape[:-1]
+    bits = _unpack_bits(words)
+    if r > 0:
+        rem = jnp.sum(bits[..., :k_cap * r].reshape(batch + (k_cap, r))
+                      << jnp.arange(r), axis=-1)
+    else:
+        rem = jnp.zeros(batch + (k_cap,), jnp.int32)
+    ub = bits[..., k_cap * r:]
+    u_cap = ub.shape[-1]
+    z = ub == 0
+    # every 0-bit in the unary region terminates a code; the i-th code's
+    # terminator position is the i-th zero (zero-padding past the encoded
+    # region ranks >= k_cap and is dropped)
+    rank = jnp.cumsum(z.astype(jnp.int32), axis=-1) - 1
+
+    def one(zb, rk):
+        return jnp.zeros((k_cap,), jnp.int32).at[
+            jnp.where(zb, rk, k_cap)].set(
+                jnp.arange(u_cap, dtype=jnp.int32), mode="drop")
+
+    zpos = jax.vmap(one)(z.reshape((-1, u_cap)),
+                         rank.reshape((-1, u_cap))).reshape(batch + (k_cap,))
+    prev = jnp.concatenate(
+        [jnp.full(batch + (1,), -1, jnp.int32), zpos[..., :-1]], axis=-1)
+    q = zpos - prev - 1
+    gaps = ((q << r) | rem) + 1
+    return jnp.cumsum(gaps, axis=-1) - 1
+
+
 def bitmap_select(words: jax.Array, vals: jax.Array, d: int) -> jax.Array:
     """Dense reconstruction of a bitmap-coded message: ``words [..., W]``
     (int32 occupancy) + ``vals [..., k]`` (coordinate-ordered values) ->
@@ -141,11 +295,8 @@ def bitmap_select(words: jax.Array, vals: jax.Array, d: int) -> jax.Array:
     value; unset coordinates decode to exact zeros. Batch dims broadcast, so
     gathered [workers, ...] buffers and stacked leaves decode in one call.
     """
-    u = jax.lax.bitcast_convert_type(words, jnp.uint32)
-    bits = (u[..., :, None] >> jnp.arange(WORD_BITS, dtype=jnp.uint32)) \
-        & jnp.uint32(1)
-    mask = bits.reshape(bits.shape[:-2] + (-1,))[..., :d]
-    rank = jnp.cumsum(mask.astype(jnp.int32), axis=-1) - 1
+    mask = _unpack_bits(words)[..., :d]
+    rank = jnp.cumsum(mask, axis=-1) - 1
     sel = jnp.take_along_axis(
         vals, jnp.clip(rank, 0, vals.shape[-1] - 1), axis=-1)
     return jnp.where(mask != 0, sel, jnp.zeros((), vals.dtype))

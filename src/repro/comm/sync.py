@@ -25,11 +25,19 @@ concatenated coordinate space and exchanged with a single all_gather pair
 per wire dtype, so a tree of hundreds of small leaves costs O(1) collectives
 instead of O(n_leaves). Tiny (dense-passthrough) leaves share one psum the
 same way. Each leaf ships under its statically stamped wire layout
-(repro.comm.wire_layout): int32 COO list, packed occupancy bitmap, or an
-index-elided dense value run — whichever realizes the fewest bytes, so
-full-capacity compositions (identity∘qsgd, bernoulli∘ternary) pay zero
-index overhead. Compression happens exactly once per leaf, in the backend —
-this layer never re-discovers nonzeros from a dense array.
+(repro.comm.wire_layout): int32 COO list, packed occupancy bitmap, an
+index-elided dense value run, or a Golomb-Rice delta-coded index stream
+(wire-format v3) — whichever realizes the fewest bytes, so full-capacity
+compositions (identity∘qsgd, bernoulli∘ternary) pay zero index overhead
+and low-density leaves ship entropy-coded indices. RICE streams are
+variable-length, so buckets containing them run a TWO-PHASE exchange:
+phase one all-gathers the per-layer encoded word counts (a tiny int32
+vector — in a real ragged collective this is what sizes the receives),
+phase two gathers the payload padded to its static worst-case capacity so
+the HLO collective keeps a static shape under jit; wire-byte accounting
+charges the true encoded lengths (plus the counts vector), never the
+padding. Compression happens exactly once per leaf, in the backend — this
+layer never re-discovers nonzeros from a dense array.
 
 Multi-pod: with ``resparsify_pods`` the intra-pod average is re-sparsified
 before the inter-pod exchange — exactly the optional step 7 of Algorithm 1,
@@ -167,13 +175,22 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
     and packed per their statically stamped wire layout
     (repro.comm.wire_layout): COO leaves contribute (values, int32
     coordinates), BITMAP leaves (coordinate-ordered values, packed
-    occupancy words), DENSE leaves an index-elided value run. One
-    all_gather moves the bucket's value stream, one the concatenated int32
-    index/word stream (skipped entirely when every leaf elides its index),
-    then a single scatter-add in worker-major order reconstructs the flat
-    bucket — bitmap rank-gathers and dense iotas feed the same scatter, so
-    every layout accumulates in the same sequential order as the dense
-    psum (the bit-identity contract). Values travel codec-encoded (the
+    occupancy words), DENSE leaves an index-elided value run, RICE leaves
+    (coordinate-ordered values, Golomb-Rice coded index words padded to
+    their static capacity). Buckets with RICE leaves first all-gather the
+    per-layer encoded word counts (phase one of the two-phase exchange —
+    the tiny vector that sizes a real ragged receive; here it also zeroes
+    payload padding before decode and prices the realized bytes). One
+    all_gather then moves the bucket's value stream, one the concatenated
+    int32 index/word stream (skipped entirely when every leaf elides its
+    index), then a single scatter-add in worker-major order reconstructs
+    the flat bucket — bitmap rank-gathers, dense iotas, and rice gap
+    prefix-sums feed the same scatter, so every layout accumulates in the
+    same sequential order as the dense psum (the bit-identity contract).
+    Wire bytes charge RICE leaves their true encoded lengths plus the
+    counts vector — the static padding is an XLA static-shape artifact,
+    not traffic a length-aware collective would move. Values travel
+    codec-encoded (the
     backend already emitted the wire representation); codecs with a
     per-message scale gather the (tiny) scale vector alongside and decode
     locally after the collective, per (worker, leaf, layer) slot. Dense-
@@ -219,22 +236,30 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
             sum((items[i][1].values.shape[0] if items[i][1].values.ndim == 2
                  else 1) * items[i][1].d for i in ids), len(ids))
         vals_parts, widx_parts, scale_parts, slot_parts = [], [], [], []
+        count_parts: list = []           # realized RICE words per layer
+        static_idx_words = 0             # fixed-layout index words
         plans: list = []                 # (item id, LeafPlan, v_off, i_off,
-        coord_off = 0                    #  coord_off) — the bucket's static
-        v_off = 0                        #  self-description
+        coord_off = 0                    #  coord_off, c_off) — the bucket's
+        v_off = 0                        #  static self-description
         i_off = 0
         s_off = 0
+        c_off = 0
         for i in ids:
             sg = items[i][1]
             lp = wire_layout.plan(sg)
-            v2d, w2d = wire_layout.pack(sg, lp)  # [L, val_len], [L, idx_len]
+            # [L, val_len], [L, idx_len], [L] realized rice words
+            v2d, w2d, nw = wire_layout.pack(sg, lp)
             if lp.layout == "coo":
-                # only coordinate lists get the bucket offset; bitmap words
-                # are opaque bit payload and dense runs ship no index at all
+                # only coordinate lists get the bucket offset; bitmap/rice
+                # words are opaque bit payload and dense runs ship no index
                 w2d = (w2d + (jnp.arange(lp.layers, dtype=jnp.int32)
                               * lp.d)[:, None] + jnp.int32(coord_off))
             if lp.idx_len:
                 widx_parts.append(w2d.reshape(-1))
+            if lp.layout == "rice":
+                count_parts.append(nw.reshape(-1))
+            else:
+                static_idx_words += lp.layers * lp.idx_len
             vals_parts.append(v2d.reshape(-1))
             if codec.has_scale:
                 slot_parts.append(
@@ -242,18 +267,35 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
                                lp.val_len) + jnp.int32(s_off))
                 scale_parts.append(jnp.asarray(sg.scale, jnp.float32)
                                    .reshape(-1))
-            plans.append((i, lp, v_off, i_off, coord_off))
+            plans.append((i, lp, v_off, i_off, coord_off, c_off))
             v_off += lp.layers * lp.val_len
             i_off += lp.layers * lp.idx_len
             coord_off += lp.block
             s_off += lp.layers
+            c_off += lp.layers if lp.layout == "rice" else 0
             overflow = overflow + jnp.sum(sg.overflow())
+        if count_parts:
+            # phase one of the two-phase exchange: the per-layer encoded
+            # word counts of every RICE stream in this bucket. A real
+            # ragged collective sizes its receives from exactly this
+            # vector; the static-shape emulation below uses it to zero
+            # payload padding pre-decode and to price realized bytes.
+            counts_flat = jnp.concatenate(count_parts)           # [R]
+            gcounts = jax.lax.all_gather(counts_flat, axis,
+                                         tiled=False)            # [m, R]
+            wire += float(counts_flat.size * 4)                  # the vector
+            wire = wire + 4.0 * jnp.sum(counts_flat).astype(jnp.float32)
+        else:
+            gcounts = None
         vals_flat = jnp.concatenate(vals_parts)
         gvals = jax.lax.all_gather(vals_flat, axis, tiled=False)  # [m, V]
         if widx_parts:
+            # phase two: the index/word payload at its static shape — for
+            # RICE segments only the true encoded words (charged above)
+            # are protocol bytes, the rest is zero padding
             widx_flat = jnp.concatenate(widx_parts)
             gwidx = jax.lax.all_gather(widx_flat, axis, tiled=False)  # [m, I]
-            wire += float(widx_flat.size * 4)
+            wire += float(static_idx_words * 4)
         else:
             gwidx = None                 # every leaf elided its index stream
         if codec.has_scale:
@@ -268,17 +310,20 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
         else:
             decoded = gvals.astype(jnp.float32)
         upd_parts, coord_parts = [], []
-        for (i, lp, v0, i0, c0) in plans:
+        for (i, lp, v0, i0, c0, cc0) in plans:
             dv = decoded[:, v0:v0 + lp.layers * lp.val_len]
             wseg = (gwidx[:, i0:i0 + lp.layers * lp.idx_len]
                     if lp.idx_len else None)
-            upd, crd = wire_layout.unpack_gathered(lp, dv, wseg, c0)
+            wcnt = (gcounts[:, cc0:cc0 + lp.layers]
+                    if lp.layout == "rice" else None)
+            upd, crd = wire_layout.unpack_gathered(lp, dv, wseg, c0,
+                                                   wcounts=wcnt)
             upd_parts.append(upd)
             coord_parts.append(crd)
         dense = jnp.zeros((coord_off,), jnp.float32)
         dense = dense.at[jnp.concatenate(coord_parts, axis=1).reshape(-1)].add(
             jnp.concatenate(upd_parts, axis=1).reshape(-1), mode="drop") / m
-        for (i, lp, _, _, c0) in plans:
+        for (i, lp, _, _, c0, _) in plans:
             leaf = leaves[i]
             out[i] = (dense[c0:c0 + lp.block].reshape(leaf.shape)
                       .astype(leaf.dtype))

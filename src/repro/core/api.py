@@ -44,11 +44,13 @@ class CompressionConfig:
 
     On the sparse wires each leaf's bucket layout (``wire_layout``) is
     chosen statically per leaf from ``(k_cap, d)`` and the codec wire
-    width: COO index list, packed occupancy bitmap, or index-elided dense
-    value run — whichever realizes the fewest wire bytes (the section-3.3
-    shorter-branch rule on the actual collective; see
-    repro.comm.wire_layout). ``"auto"`` is that argmin; a concrete name
-    forces one layout everywhere.
+    width: COO index list, packed occupancy bitmap, index-elided dense
+    value run, or Golomb-Rice delta-coded index stream (wire-format v3,
+    shipped via a two-phase exchange) — whichever realizes the fewest wire
+    bytes (the section-3.3 shorter-branch rule on the actual collective,
+    with RICE entering at its worst-case capacity so realized bytes only
+    undercut the choice; see repro.comm.wire_layout). ``"auto"`` is that
+    argmin; a concrete name forces one layout everywhere.
 
     Invalid combinations (e.g. error feedback on the residual-free
     identity∘f32) raise here, at construction time — never silently
@@ -69,9 +71,10 @@ class CompressionConfig:
     kernel_interpret: bool | None = None  # force pallas interpret mode (None=auto)
     # wire/sync settings (consumed by repro.comm)
     wire: str = "dense"              # dense | gather | packed
-    wire_layout: str = "auto"        # auto | coo | bitmap | dense — per-leaf
-                                     # bucket layout (repro.comm.wire_layout);
-                                     # auto = min realized bytes per leaf
+    wire_layout: str = "auto"        # auto | coo | bitmap | dense | rice —
+                                     # per-leaf bucket layout
+                                     # (repro.comm.wire_layout); auto = min
+                                     # realized bytes per leaf
     capacity_slack: float = 1.25     # k_cap slack over the selector's rho target
     resparsify_pods: bool = False    # Alg.1 step 7 -> hierarchical pod-level resync
 
@@ -79,9 +82,11 @@ class CompressionConfig:
         if self.wire not in ("dense", "gather", "packed"):
             raise ValueError(f"unknown wire format {self.wire!r}; "
                              "have ('dense', 'gather', 'packed')")
-        if self.wire_layout not in ("auto", "coo", "bitmap", "dense"):
+        if self.wire_layout not in ("auto", "coo", "bitmap", "dense",
+                                    "rice"):
             raise ValueError(f"unknown wire layout {self.wire_layout!r}; "
-                             "have ('auto', 'coo', 'bitmap', 'dense')")
+                             "have ('auto', 'coo', 'bitmap', 'dense', "
+                             "'rice')")
         scheme = self.scheme()       # raises on unknown selector/codec/algo
         if self.name.split("+")[0] == "gspar" \
                 and self.algo not in ("greedy", "closed"):

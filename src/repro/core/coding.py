@@ -20,9 +20,14 @@ Two accounting families live here:
     from the packer itself (repro.comm.compaction), so neither family can
     drift from the other — or from the bytes on the wire.
 
-``delta_coded_index_bits`` is the off-wire estimator bridging the two: what
-the int32 index stream would cost under Golomb/Elias-gamma delta coding of
-the sorted coordinate gaps — the entropy-coded bytes column of bench_wire.
+Wire-format v3 moved the entropy-coded index stream from estimator to
+realized branch: ``rice_parameter`` / ``rice_stream_bits`` are the model of
+the RICE layout (Golomb-Rice delta coding of the sorted coordinate gaps,
+``repro.comm.compaction.rice_encode``), whose realized cost the layout
+chooser compares against COO/BITMAP/DENSE through the same
+``realized_wire_bits`` entry point. ``delta_coded_index_bits`` (Golomb with
+data-fitted m / Elias-gamma) remains as the off-wire estimator of the
+residual headroom beyond the static-parameter code actually shipped.
 """
 from __future__ import annotations
 
@@ -36,7 +41,8 @@ import numpy as np
 # constant, one rounding rule, shared with repro.comm.compaction so the
 # layout chooser can never charge a different word width than the
 # collective ships (compaction imports only jax — no cycle).
-from repro.comm.compaction import WORD_BITS, bitmap_words
+from repro.comm.compaction import (RICE_MAX_R, WORD_BITS, bitmap_words,
+                                   rice_cap_words)
 
 # Realized index width on the sparse wires: COO coordinates travel as int32
 # (the bucketed collectives address up to 2^31 coords per wire-dtype group).
@@ -136,6 +142,54 @@ def bitmap_word_bits(d: int) -> float:
     return float(bitmap_words(d) * WORD_BITS)
 
 
+def rice_parameter(k_cap: int, d: int) -> int:
+    """Static Golomb-Rice parameter for one leaf's index stream, from the
+    trace-time constants alone: ``2^r ~= ln2 * (d / k_cap)`` — the
+    geometric-optimal Golomb m for coordinate gaps of mean ``d / k_cap``,
+    rounded to the nearest power of two (nearest in log space, half-up).
+    Clipped to [0, RICE_MAX_R] so every shift stays inside the int32
+    coordinate arithmetic. The rule is part of the wire format (see
+    docs/WIRE_FORMAT.md): sender and receiver derive r independently, so
+    it never travels.
+    """
+    mu = max(1.0, float(d) / max(1, k_cap))
+    m_opt = math.log(2.0) * mu
+    if m_opt <= 1.0:
+        return 0
+    return min(RICE_MAX_R, int(math.floor(math.log2(m_opt) + 0.5)))
+
+
+def rice_wire_words(k_cap: int, d: int) -> int:
+    """Static int32 word capacity of one layer's RICE index stream at the
+    static parameter — the payload shape on the collective AND the
+    chooser's cost for the RICE branch. Realized streams use
+    ``used <= rice_wire_words`` words (the phase-one counts vector);
+    adversarial index draws can reach but never exceed it."""
+    return rice_cap_words(k_cap, d, rice_parameter(k_cap, d))
+
+
+def rice_stream_bits(idx, k_cap: int, d: int, r: int | None = None) -> int:
+    """EXACT bit length of one layer's realized RICE index stream — the
+    off-wire twin of ``repro.comm.compaction.rice_encode`` (which the
+    property tests pin word-for-word): k_cap codes of (r + 1) fixed bits
+    each, plus the unary quotient mass of the live sorted-coordinate gaps
+    (dead slots code a zero quotient). ``idx`` is the live coordinate set
+    (slots whose wire value is nonzero)."""
+    if r is None:
+        r = rice_parameter(k_cap, d)
+    gaps = _index_gaps(idx, d)
+    if gaps.size > k_cap:
+        raise ValueError(f"{gaps.size} live coordinates exceed k_cap={k_cap}")
+    return int(k_cap * (r + 1) + np.sum((gaps - 1) >> r))
+
+
+def rice_stream_words(idx, k_cap: int, d: int, r: int | None = None) -> int:
+    """Realized int32 words of one layer's RICE index stream: the
+    word-rounded ``rice_stream_bits`` — exactly the encoder's used-word
+    count, what phase one of the two-phase exchange reports."""
+    return -(-rice_stream_bits(idx, k_cap, d, r) // WORD_BITS)
+
+
 def realized_wire_bits(layout: str, k_cap: int, d: int,
                        value_bits: float) -> float:
     """Bits one leaf's message actually puts on the collective under a
@@ -146,9 +200,18 @@ def realized_wire_bits(layout: str, k_cap: int, d: int,
       bitmap -- k_cap value slots (coordinate-ordered) + a packed d-bit
                 occupancy map in int32 words
       dense  -- d value slots in coordinate order, index stream elided
+      rice   -- k_cap value slots (coordinate-ordered) + the static word
+                CAPACITY of the Golomb-Rice delta-coded index stream
+                (``rice_wire_words``). This is the worst case over index
+                draws: the chooser picks RICE only where even that bound
+                beats the other layouts, so the realized (data-dependent)
+                stream — accounted from the true encoded lengths by
+                repro.comm.sync — only ever comes in at or under this.
 
     Static (trace-time) Python arithmetic: the layout choice must be
-    resolvable before any buffer is built.
+    resolvable before any buffer is built. Per-message overheads that ride
+    their own tiny collectives (codec scales, RICE phase-one counts) are
+    accounted by the sync layer, uniformly across layouts.
     """
     if layout == "coo":
         return float(k_cap) * (value_bits + INDEX_BITS)
@@ -156,13 +219,18 @@ def realized_wire_bits(layout: str, k_cap: int, d: int,
         return float(k_cap) * value_bits + bitmap_word_bits(d)
     if layout == "dense":
         return float(d) * value_bits
+    if layout == "rice":
+        return (float(k_cap) * value_bits
+                + float(rice_wire_words(k_cap, d) * WORD_BITS))
     raise ValueError(f"unknown wire layout {layout!r}; "
-                     "have ('coo', 'bitmap', 'dense')")
+                     "have ('coo', 'bitmap', 'dense', 'rice')")
 
 
 # ---------------------------------------------------------------------------
-# Off-wire entropy estimators for the index stream (bench accounting only —
-# nothing below ships on a collective; see ROADMAP's Elias/Golomb item)
+# Off-wire entropy estimators for the index stream. Since wire-format v3 the
+# static-parameter Rice code SHIPS (the RICE branch above); these data-fitted
+# Golomb / Elias-gamma estimators remain as the measure of what headroom is
+# left beyond it (a data-fitted m can undercut the static 2^r slightly).
 # ---------------------------------------------------------------------------
 
 def _index_gaps(idx, d: int) -> np.ndarray:
@@ -213,10 +281,11 @@ def golomb_bits(gaps, m: int | None = None) -> float:
 
 def delta_coded_index_bits(idx, d: int, method: str = "golomb") -> float:
     """Entropy-coded size estimate of one message's index stream: sort the
-    realized coordinates, delta-code the gaps with Golomb or Elias-gamma.
-    This is the bench_wire "entropy bytes" column — an off-wire estimate of
-    what the int32 stream (``realized_wire_bits``) could shrink to, toward
-    the paper's H[Q(g)]."""
+    realized coordinates, delta-code the gaps with data-fitted Golomb or
+    Elias-gamma. Off-wire by construction (the fitted parameter would have
+    to travel); the shipped code is the static-parameter RICE branch
+    (``rice_stream_bits``), and the gap between the two is the remaining
+    headroom toward the paper's H[Q(g)]."""
     gaps = _index_gaps(idx, d)
     if method == "golomb":
         return golomb_bits(gaps)

@@ -71,8 +71,9 @@ class SparseGrad:
     codec: str = dataclasses.field(metadata=dict(static=True), default="f32")
     layout: str = dataclasses.field(metadata=dict(static=True), default="coo")
                              # wire layout (repro.comm.wire_layout): how the
-                             # bucketed collective ships this leaf — picked
-                             # statically from (k_cap, d, wire width)
+                             # bucketed collective ships this leaf (coo /
+                             # bitmap / dense / rice) — picked statically
+                             # from (k_cap, d, wire width)
     idx_sorted: bool = dataclasses.field(metadata=dict(static=True),
                                          default=False)
                              # valid-prefix slots ascend by coordinate (the
@@ -102,8 +103,12 @@ class SparseGrad:
 
     def realized_wire_bits(self) -> float:
         """Static bits this leaf's message puts on the collective under its
-        stamped layout (values + index words; per-message scales are
-        accounted by the sync layer alongside their own gather)."""
+        stamped layout (values + index words; per-message scales and RICE
+        phase-one counts are accounted by the sync layer alongside their
+        own gathers). For the RICE layout this is the static worst-case
+        capacity the chooser priced — the realized stream is data-dependent
+        and only ever comes in at or under it (repro.comm.sync charges the
+        true encoded lengths)."""
         layers = self.values.shape[0] if self.values.ndim == 2 else 1
         vb = float(jnp.dtype(self.values.dtype).itemsize * 8)
         return layers * coding.realized_wire_bits(self.layout, self.k_cap,
@@ -162,7 +167,7 @@ def _residual_from_buffers(g: jax.Array, sg: SparseGrad) -> jax.Array:
 
 def _choose_layout(cfg, codec, leaf_dtype, k_cap: int, d: int) -> str:
     """Static wire-layout stamp for one leaf (per layer): min realized
-    bytes over coo/bitmap/dense, or the config's forced override."""
+    bytes over coo/bitmap/dense/rice, or the config's forced override."""
     # lazy import: repro.comm.wire_layout pulls repro.core.coding — at
     # module level this could cycle depending on which package loads first.
     from repro.comm import wire_layout

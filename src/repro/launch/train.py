@@ -51,10 +51,12 @@ def main(argv=None):
     ap.add_argument("--wire", default="dense",
                     choices=["dense", "gather", "packed"])
     ap.add_argument("--wire-layout", default="auto",
-                    choices=["auto", "coo", "bitmap", "dense"],
+                    choices=["auto", "coo", "bitmap", "dense", "rice"],
                     help="sparse-wire bucket layout per leaf (auto = min "
                          "realized bytes: COO index list, packed occupancy "
-                         "bitmap, or index-elided dense value run)")
+                         "bitmap, index-elided dense value run, or "
+                         "Golomb-Rice delta-coded index stream shipped via "
+                         "the two-phase exchange)")
     ap.add_argument("--error-feedback", action="store_true",
                     help="carry the per-worker compression residual "
                          "(memory: one params-sized buffer per worker)")
