@@ -1,6 +1,11 @@
 """Figure 9 (adapted to TPU constraints; see DESIGN.md): write-conflict model
 for asynchronous shared-memory SGD + Algorithm-4 SVM simulation.
 
+(Formerly ``bench_async.py`` — renamed because this is the paper's
+shared-memory HOGWILD-style conflict model, not a benchmark of the
+overlapped/async collective exchange. Step-time measurements of the
+sync-vs-overlap exchange live in ``benchmarks/bench_step.py``.)
+
 Validation targets:
   * sparsification cuts the conflict rate by ~(1-(1-p)^{M-1}) / like-dense;
   * benefit grows with workers (paper: 32 threads gain more than 16);
@@ -78,7 +83,7 @@ def run(quick: bool = False):
                      f"{curves['gspar']['conflict_rate']:.3f};"
                      f"conflict_frac_dense="
                      f"{curves['dense']['conflict_rate']:.3f}"))
-    save_json("async", payload)
+    save_json("conflicts", payload)
     return rows
 
 

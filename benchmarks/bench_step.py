@@ -1,0 +1,208 @@
+"""Step-time benchmark for the sparse exchange: sync barrier vs overlapped
+per-bucket collectives (CompressionConfig.exchange), the wall-clock twin of
+bench_wire's byte accounting.
+
+Measures min-of-N wall clock of the full compress -> exchange step on a
+transformer-shaped gradient tree (1M-coordinate embedding + 24 attention
++ 8 MLP leaves + norms; ``--quick`` shrinks every dimension 4x) for every
+(wire x exchange) pair plus forced-layout rows, asserting along the way
+that both exchanges return bit-identical trees and identical wire bytes.
+The many-leaf tree is the point: real model trees have dozens of leaves,
+and per-leaf staging into monolithic bucket buffers is exactly what the
+overlapped exchange restructures — a two-leaf toy tree would time the
+compressor, not the exchange. Sync and overlap variants of each row are
+timed INTERLEAVED (alternating calls, min over all rounds) so a load
+burst on a shared runner cannot bias one side; see
+benchmarks.common.timed_us_min for why min, not mean.
+
+Honest expectations: on a single-core CPU host the collectives are
+memcpys and there is no async scheduler, so the overlap win is the
+structural one (fewer collectives, no per-leaf staging) — a few percent
+of step time, near the jitter floor at ``--quick`` scale. That is why
+the gate works off the committed baseline: ``python -m
+benchmarks.bench_step --json`` writes ``BENCH_step.json`` at the repo
+root, and scripts/check_bench.py (``--gate step``) checks band-tolerant
+``us_per_step`` per row on fresh runs plus the deterministic invariant
+that the COMMITTED baseline's gated rows show overlap strictly beating
+sync. ``--strict`` asserts that invariant on the fresh run itself — use
+it when regenerating the baseline, so a jitter-poisoned run is refused
+instead of committed; CI stays band-only because runner timing is noisy.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import save_json, timed_us_min
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (wire, wire_layout, gated): gated rows are the acceptance pair — the
+# committed baseline must show overlap < sync on them (check_bench
+# enforces it on the baseline; --strict enforces it on a fresh run).
+ROWS = (
+    ("gather", "auto", True),
+    ("packed", "auto", True),
+    ("gather", "rice", False),   # in-band counts vs two-phase exchange
+    ("gather", "coo", False),
+)
+
+
+def _model_tree(quick: bool):
+    """Transformer-shaped gradient tree: one embedding matrix, 24 attention
+    blocks, 8 MLP expansions, a few norms — 35 leaves at full scale so the
+    exchange's per-leaf staging costs are actually represented."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    shrink = 2 if quick else 0
+    n_blocks, n_mlp, n_norms = (12, 4, 2) if quick else (24, 8, 4)
+    rng = np.random.default_rng(0)
+
+    def leaf(bits):
+        return jnp.asarray(rng.standard_normal((1 << (bits - shrink),)),
+                           jnp.float32)
+
+    grads = {"embed": leaf(20),
+             "blocks": [leaf(16) for _ in range(n_blocks)],
+             "mlp": [leaf(18) for _ in range(n_mlp)],
+             "norms": [jnp.asarray(rng.standard_normal((128,)), jnp.float32)
+                       for _ in range(n_norms)]}
+    stacked = {"embed": False, "blocks": [False] * n_blocks,
+               "mlp": [False] * n_mlp, "norms": [False] * n_norms}
+    return grads, stacked
+
+
+def _timed_pair_us(fn_a, fn_b, iters: int) -> tuple[float, float]:
+    """Interleaved min-of-N: alternate the two variants every round so
+    machine-load noise hits both equally; return (min_a_us, min_b_us)."""
+    fn_a(), fn_b(), fn_a(), fn_b()                     # warmup both
+    best_a = best_b = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a * 1e6, best_b * 1e6
+
+
+def run(quick: bool = False, return_payload: bool = False,
+        strict: bool = False):
+    import repro  # noqa: F401  (jax compat shims)
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comm.sync import sync_tree
+    from repro.core.api import CompressionConfig
+
+    rows, payload = [], {}
+    grads, stacked = _model_tree(quick)
+    dense_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(grads))
+    mesh = jax.make_mesh((1,), ("data",))
+    iters = 30 if quick else 40
+    args = (jax.random.key(7), grads)
+
+    def build(cfg):
+        def step(key, g):
+            synced, _, stats = sync_tree(cfg, key, g, data_axis="data",
+                                         stacked=stacked)
+            return synced, stats
+        with jax.set_mesh(mesh):
+            fn = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P(), P()),
+                                       out_specs=(P(), P()),
+                                       axis_names={"data"}, check_vma=False))
+            out = fn(*args)                             # compile + warm
+            jax.block_until_ready(out[0])
+        return fn, out
+
+    # dense psum reference (exchange-independent): the bar the sparse wire
+    # is chasing overall — reported for context, never gated on timing
+    dense_cfg = CompressionConfig(name="gspar", rho=0.01, wire="dense",
+                                  min_leaf_size=256, backend="reference")
+    with jax.set_mesh(mesh):
+        dense_fn, dense_out = build(dense_cfg)
+        dense_us = timed_us_min(
+            lambda: jax.block_until_ready(dense_fn(*args)[0]), iters=iters)
+    payload["step:dense:-:sync"] = {
+        "us_per_step": dense_us,
+        "wire_bytes": float(dense_out[1].wire_bytes),
+        "dense_bytes": float(dense_bytes),
+    }
+    rows.append(("step:dense:-:sync", dense_us,
+                 f"wire_bytes={float(dense_out[1].wire_bytes):.3g}"))
+
+    for wire, layout, gated in ROWS:
+        fns, outs = {}, {}
+        for exchange in ("sync", "overlap"):
+            cfg = CompressionConfig(name="gspar", rho=0.01, wire=wire,
+                                    wire_layout=layout, min_leaf_size=256,
+                                    backend="reference", exchange=exchange)
+            fns[exchange], outs[exchange] = build(cfg)
+
+        # the contract the restructure must not break, checked on the
+        # very trees being timed: bit-identical output, identical bytes
+        same = all(bool(jnp.all(a == b)) for a, b in
+                   zip(jax.tree.leaves(outs["sync"][0]),
+                       jax.tree.leaves(outs["overlap"][0])))
+        wb_s = float(outs["sync"][1].wire_bytes)
+        wb_o = float(outs["overlap"][1].wire_bytes)
+        assert same, f"{wire}:{layout}: overlap diverged from sync"
+        assert wb_s == wb_o, (wire, layout, wb_s, wb_o)
+
+        with jax.set_mesh(mesh):
+            sync_us, overlap_us = _timed_pair_us(
+                lambda: jax.block_until_ready(fns["sync"](*args)[0]),
+                lambda: jax.block_until_ready(fns["overlap"](*args)[0]),
+                iters)
+        for exchange, us in (("sync", sync_us), ("overlap", overlap_us)):
+            key = f"step:{wire}:{layout}:{exchange}"
+            payload[key] = {"us_per_step": us, "wire_bytes": wb_s,
+                            "dense_bytes": float(dense_bytes)}
+            rows.append((key, us, f"wire_bytes={wb_s:.3g};"
+                                  f"bit_identical={same}"))
+        delta = sync_us - overlap_us
+        payload[f"delta:{wire}:{layout}"] = {
+            "sync_us": sync_us, "overlap_us": overlap_us,
+            "delta_us": delta, "speedup": sync_us / overlap_us,
+            "gated": gated,
+        }
+        rows.append((f"delta:{wire}:{layout}", delta,
+                     f"sync={sync_us:.0f}us;overlap={overlap_us:.0f}us;"
+                     f"speedup={sync_us / overlap_us:.3f}x"))
+        if strict and gated:
+            assert overlap_us < sync_us, (
+                f"{wire}:{layout}: overlapped exchange "
+                f"({overlap_us:.0f}us) did not beat the sync barrier "
+                f"({sync_us:.0f}us) — do not commit this baseline")
+
+    save_json("step", payload)
+    return (rows, payload) if return_payload else rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_step.json at the repo root")
+    ap.add_argument("--quick", action="store_true",
+                    help="4x-shrunk tree, fewer iters — smoke-check the "
+                         "harness, too jittery to gate on")
+    ap.add_argument("--strict", action="store_true",
+                    help="assert overlap < sync on the gated rows (baseline "
+                         "regeneration mode)")
+    cli = ap.parse_args()
+    bench_rows, bench_payload = run(quick=cli.quick, return_payload=True,
+                                    strict=cli.strict)
+    emit(bench_rows)
+    if cli.json:
+        path = os.path.join(REPO_ROOT, "BENCH_step.json")
+        with open(path, "w") as f:
+            json.dump(bench_payload, f, indent=2, default=float)
+        print(f"wrote {path}")

@@ -24,6 +24,25 @@ def timed_us(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def timed_us_min(fn, *args, warmup: int = 2, iters: int = 30) -> float:
+    """Min wall-clock microseconds per call (after warmup).
+
+    The min is the right statistic for step-time deltas on a shared,
+    single-core box: the mean folds in scheduler noise an order of
+    magnitude larger than the effects under test, while the fastest
+    observed run is the best available estimate of the work actually
+    issued. Pair with interleaved measurement (alternate the variants
+    being compared) so a load burst cannot bias one side."""
+    for _ in range(warmup):
+        fn(*args)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
 def emit(rows):
     """Print the harness CSV: name,us_per_call,derived."""
     for name, us, derived in rows:

@@ -17,16 +17,17 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (bench_async, bench_cnn, bench_convex,
-                            bench_dryrun, bench_qsgd, bench_theory,
-                            bench_wire)
+    from benchmarks import (bench_cnn, bench_conflicts, bench_convex,
+                            bench_dryrun, bench_qsgd, bench_step,
+                            bench_theory, bench_wire)
     benches = {
         "theory": bench_theory.run,       # Lemma 3 / Theorem 4 / solver cost
         "convex": bench_convex.run,       # Figures 1-4
         "qsgd": bench_qsgd.run,           # Figures 5-6
         "cnn": bench_cnn.run,             # Figures 7-8
-        "async": bench_async.run,         # Figure 9 (adapted)
+        "conflicts": bench_conflicts.run,  # Figure 9 (adapted; ex-"async")
         "wire": bench_wire.run,           # backend x wire pipeline costs
+        "step": bench_step.run,           # sync vs overlapped exchange clock
         "dryrun": bench_dryrun.run,       # deliverables e+g tables
     }
     only = set(args.only.split(",")) if args.only else None

@@ -1,21 +1,37 @@
-"""CI regression gate for realized wire bytes.
+"""CI regression gate for the committed benchmark baselines.
 
-Compares a freshly generated ``BENCH_wire.json`` against the committed
-baseline and fails when any composition's *realized* byte metrics regress
-beyond its tolerance band. Timing fields are deliberately ignored (CI
-runners are noisy); byte metrics are statically determined by the wire
-format, so any growth is a real protocol regression — exactly what the
-wire-format-v2 work exists to prevent silently re-happening.
+Two gates, selected by ``--gate``:
+
+``--gate wire`` (default) compares a freshly generated ``BENCH_wire.json``
+against the committed baseline and fails when any composition's *realized*
+byte metrics regress beyond its tolerance band. Timing fields are
+deliberately ignored (CI runners are noisy); byte metrics are statically
+determined by the wire format, so any growth is a real protocol
+regression — exactly what the wire-format-v2 work exists to prevent
+silently re-happening.
+
+``--gate step`` compares a freshly generated ``BENCH_step.json`` and gates
+``us_per_step`` per row with a deliberately wide band (STEP_TOLERANCE —
+CI runners are shared and noisy; the band only catches order-of-magnitude
+blowups such as an accidental retrace per step). The part of the step
+gate that must never be noise-excused is checked on the COMMITTED
+baseline, which is deterministic: every ``delta:*`` record marked
+``gated`` must show the overlapped exchange strictly beating the sync
+barrier (``overlap_us < sync_us``) — regenerate the baseline with
+``python -m benchmarks.bench_step --strict --json`` on a quiet machine;
+--strict refuses to produce a baseline that would fail this.
 
     python scripts/check_bench.py FRESH BASELINE [--tolerance 0.02]
+    python scripts/check_bench.py BENCH_step.json BASELINE --gate step
 
-Rules:
-  * gated metrics: ``wire_bytes``, ``layout_bytes``, ``entropy_bytes`` —
-    fresh must not exceed baseline * (1 + tol) for any key carrying them.
-    Since wire-format v3 all three are REALIZED: wire_bytes/layout_bytes
-    charge RICE leaves their true encoded lengths (+ phase-one counts),
-    and entropy_bytes is the realized cost of forcing every sparse leaf
-    onto the RICE branch (no longer an off-wire estimator);
+Shared rules:
+  * gated metrics (wire): ``wire_bytes``, ``layout_bytes``,
+    ``entropy_bytes`` — fresh must not exceed baseline * (1 + tol) for
+    any key carrying them. Since wire-format v3 all three are REALIZED:
+    wire_bytes/layout_bytes charge RICE leaves their true encoded lengths
+    (+ phase-one counts), and entropy_bytes is the realized cost of
+    forcing every sparse leaf onto the RICE branch (no longer an off-wire
+    estimator);
   * per-composition tolerance overrides in ``TOLERANCES`` (longest matching
     key prefix wins) for rows with sampling-dependent byte counts;
   * a key present in the baseline but missing from the fresh payload fails
@@ -30,6 +46,10 @@ import json
 import sys
 
 GATED_METRICS = ("wire_bytes", "layout_bytes", "entropy_bytes")
+# step gate: wire_bytes on step rows stays tightly banded (it is static),
+# us_per_step rides the wide timing band below
+STEP_GATED_METRICS = ("wire_bytes", "us_per_step")
+STEP_TOLERANCE = 0.5                 # us_per_step band: runners are noisy
 
 # Longest-prefix tolerance overrides per composition key. Most byte counts
 # are static (shapes + k_cap + layout), hence the tight default; the
@@ -44,20 +64,52 @@ METRIC_TOLERANCES = {"entropy_bytes": 0.10}
 SKIP_KEYS = ("calibration", "bit_consistency")
 
 
-def band(key: str, metric: str, default: float) -> float:
+def band(key: str, metric: str, default: float,
+         metric_tols: dict | None = None) -> float:
     best, tol = -1, default
     for prefix, t in TOLERANCES.items():
         if key.startswith(prefix) and len(prefix) > best:
             best, tol = len(prefix), t
-    return max(tol, METRIC_TOLERANCES.get(metric, 0.0))
+    if metric_tols is None:
+        metric_tols = METRIC_TOLERANCES
+    return max(tol, metric_tols.get(metric, 0.0))
+
+
+def _check_step_invariant(base: dict) -> list[str]:
+    """The deterministic half of the step gate: the COMMITTED baseline's
+    gated delta rows must show overlap strictly beating sync. Checked on
+    the baseline (not the fresh run) so CI noise can never flake it —
+    what it catches is committing a baseline where the overlapped
+    exchange lost its reason to exist."""
+    failures = []
+    gated = [k for k, r in base.items()
+             if k.startswith("delta:") and isinstance(r, dict)
+             and r.get("gated")]
+    if not gated:
+        failures.append("baseline has no gated delta:* rows — the "
+                        "overlap-beats-sync invariant is unchecked "
+                        "(regenerate with benchmarks.bench_step --strict)")
+    for k in gated:
+        r = base[k]
+        if not float(r["overlap_us"]) < float(r["sync_us"]):
+            failures.append(
+                f"{k}: committed baseline shows overlap "
+                f"({float(r['overlap_us']):.0f}us) not beating sync "
+                f"({float(r['sync_us']):.0f}us) — regenerate the baseline "
+                "with benchmarks.bench_step --strict on a quiet machine")
+    return failures
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("fresh", help="freshly generated BENCH_wire.json")
-    ap.add_argument("baseline", help="committed baseline BENCH_wire.json")
+    ap.add_argument("fresh", help="freshly generated benchmark payload")
+    ap.add_argument("baseline", help="committed baseline payload")
     ap.add_argument("--tolerance", type=float, default=0.02,
                     help="default allowed relative regression per metric")
+    ap.add_argument("--gate", default="wire", choices=["wire", "step"],
+                    help="which baseline family to gate: realized wire "
+                         "bytes (BENCH_wire.json) or step wall-clock "
+                         "(BENCH_step.json)")
     args = ap.parse_args(argv)
 
     with open(args.fresh) as f:
@@ -65,23 +117,32 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         base = json.load(f)
 
+    gated_metrics = GATED_METRICS if args.gate == "wire" else STEP_GATED_METRICS
+    metric_tols = dict(METRIC_TOLERANCES)
+    if args.gate == "step":
+        metric_tols["us_per_step"] = STEP_TOLERANCE
+
     failures, notes = [], []
+    if args.gate == "step":
+        failures.extend(_check_step_invariant(base))
     for key, brec in sorted(base.items()):
         if key in SKIP_KEYS or not isinstance(brec, dict):
             continue
+        if key.startswith("delta:"):
+            continue                 # timing deltas: baseline-invariant only
         frec = fresh.get(key)
         if frec is None:
             failures.append(f"{key}: present in baseline but missing from "
                             "fresh run (benchmark coverage regressed)")
             continue
-        for metric in GATED_METRICS:
+        for metric in gated_metrics:
             if metric not in brec:
                 continue
             if metric not in frec:
                 failures.append(f"{key}.{metric}: dropped from fresh payload")
                 continue
             b, x = float(brec[metric]), float(frec[metric])
-            tol = band(key, metric, args.tolerance)
+            tol = band(key, metric, args.tolerance, metric_tols)
             if x > b * (1 + tol):
                 failures.append(
                     f"{key}.{metric}: {x:.0f} > baseline {b:.0f} "
@@ -95,15 +156,16 @@ def main(argv=None) -> int:
         notes.append(f"{key}: new in fresh run (not gated yet — commit the "
                      "regenerated baseline to start gating it)")
 
+    label = "wire-byte" if args.gate == "wire" else "step-time"
     for n in notes:
         print(f"note: {n}")
     if failures:
         for msg in failures:
-            print(f"::error::wire-byte regression: {msg}")
-        print(f"\n{len(failures)} wire-byte regression(s) vs {args.baseline}",
+            print(f"::error::{label} regression: {msg}")
+        print(f"\n{len(failures)} {label} regression(s) vs {args.baseline}",
               file=sys.stderr)
         return 1
-    print(f"wire bytes OK: {args.fresh} within tolerance of {args.baseline}")
+    print(f"{label} OK: {args.fresh} within tolerance of {args.baseline}")
     return 0
 
 

@@ -7,6 +7,14 @@ recorded baseline, and append an iteration record to results/perf/.
       memory term should drop ~5x" \
       -- --attn-impl chunked
 (args after `--` are forwarded to repro.launch.dryrun)
+
+Comm-tuning sweeps ride the same forwarding: vary the exchange structure
+and the XLA flag preset per iteration, e.g.
+
+  PYTHONPATH=src python scripts/hillclimb.py --pair gemma2-27b:train_4k \
+      --iter 2 --change "exchange=overlap xla=latency_hiding" \
+      --hypothesis "overlapped buckets hide the gather behind packing" \
+      -- --exchange overlap --xla-preset latency_hiding
 """
 from __future__ import annotations
 
@@ -24,8 +32,17 @@ DRY = "results/dryrun"
 def baseline_for(pair: str) -> dict:
     arch, shape = pair.split(":")
     path = os.path.join(DRY, f"{arch.replace('.', '')}_{shape}_single.json")
-    with open(path) as f:
-        return json.load(f)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        raise SystemExit(
+            f"hillclimb: no sweep baseline at {path} for pair {pair!r}.\n"
+            "Generate it first (single-pod dryrun of the unmodified config):\n"
+            f"  PYTHONPATH=src python -m repro.launch.dryrun "
+            f"--arch {arch} --shape {shape} --out {path}\n"
+            "or point --baseline-from at an existing results/perf record."
+        ) from None
 
 
 def main():

@@ -39,6 +39,43 @@ charges the true encoded lengths (plus the counts vector), never the
 padding. Compression happens exactly once per leaf, in the backend — this
 layer never re-discovers nonzeros from a dense array.
 
+Exchange structure (CompressionConfig.exchange):
+  sync    -- the classic end-of-step barrier (``_bucketed_sync``): one
+             concatenated coordinate space per wire-dtype bucket, one
+             all_gather for values + one for index words (+ tiny ones for
+             RICE counts and codec scales), a single bucket-wide
+             scatter-add.
+  overlap -- the overlapped per-bucket exchange (``_overlapped_sync``):
+             leaves are walked in REVERSE order (the backward pass
+             produces the last layers' gradients first, so their buckets
+             can be issued while earlier layers are still being packed)
+             and grouped into buckets capped at
+             ``overlap_bucket_bytes``. Each bucket ships a fused int32
+             word stream -- ``[RICE counts | index words | bitcast value
+             words (4-byte dtypes) | bitcast scale words]`` per leaf, at
+             static offsets derivable from the LeafPlans alone -- so
+             RICE's phase-one counts ride in-band at a header offset
+             instead of costing a separate sequential collective, and the
+             codec-scale gather folds in too. Sub-word value dtypes
+             (bf16/int8) skip the bitcast packing and ride a companion
+             native-dtype all_gather per bucket (the pad/reshape/bitcast
+             round trip costs real copies; a plain native-dtype gather,
+             like the sync barrier's value collective, does not). All
+             buckets are ISSUED before any is CONSUMED:
+             under an async-collective schedule (repro.comm.xla_flags)
+             bucket i's gather overlaps bucket i+1's packing. Decode
+             slices the static segments back out per leaf, then ONE
+             scatter-add per bucket accumulates every leaf (blocks are
+             disjoint, offsets applied at decode). Issue order is a
+             schedule choice; the per-coordinate reduction order is
+             worker-major either way, which is why overlap stays
+             bit-identical to sync and to the dense psum (the
+             dense-vs-gather contract). Wire-byte accounting charges
+             exactly the same components as sync — value/index/count/
+             scale bytes; fused-stream segments are 4-byte aligned by
+             construction and the companion stream is native-dtype, so
+             no padding is ever moved or charged.
+
 Multi-pod: with ``resparsify_pods`` the intra-pod average is re-sparsified
 before the inter-pod exchange — exactly the optional step 7 of Algorithm 1,
 mapped onto the pod axis of the mesh. Wire bytes are reported per stage
@@ -332,6 +369,239 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
     return out, wire, overflow
 
 
+def _words_of(n_elems: int, dtype) -> int:
+    """int32 words needed to carry ``n_elems`` of ``dtype`` (word-aligned)."""
+    return -(-n_elems * jnp.dtype(dtype).itemsize // 4)
+
+
+def _word_pack(x: jax.Array) -> jax.Array:
+    """Bitcast any wire-dtype buffer into a flat int32 word stream.
+    Sub-word dtypes (bf16/int16: 2 per word, int8: 4 per word) are
+    zero-padded to a word multiple; the pad is alignment, not payload,
+    and is never charged to wire bytes."""
+    flat = x.reshape(-1)
+    per = 4 // jnp.dtype(flat.dtype).itemsize
+    if per > 1:
+        pad = (-flat.shape[0]) % per
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        flat = flat.reshape(-1, per)
+    return jax.lax.bitcast_convert_type(flat, jnp.int32)
+
+
+def _word_unpack(words: jax.Array, dtype, n_elems: int) -> jax.Array:
+    """Inverse of ``_word_pack`` on a gathered ``[m, W]`` segment:
+    ``[m, n_elems]`` in the wire dtype, alignment padding sliced off."""
+    out = jax.lax.bitcast_convert_type(words, jnp.dtype(dtype))
+    m = words.shape[0]
+    return out.reshape(m, -1)[:, :n_elems]
+
+
+def _overlapped_sync(items: list, leaves: list, axis: Axis,
+                     cfg: CompressionConfig):
+    """Overlapped drop-in for ``_bucketed_sync``: same arguments, same
+    returns, bit-identical outputs, identical wire-byte accounting —
+    different collective structure (see the module docstring).
+
+    Sparse leaves are walked in reverse order and greedily grouped into
+    buckets of at most ``cfg.overlap_bucket_bytes`` payload (a single
+    leaf always fits — its stream is never split). Each bucket's leaf
+    streams concatenate into ONE int32 all_gather:
+
+        leaf stream = [counts (rice, layers words)]
+                      [index words (layers*idx_len; coo pre-offset by
+                       its layer strides — each leaf scatters into its
+                       OWN block, so no cross-leaf coordinate space)]
+                      [value words (4-byte dtypes only: f32/int32
+                       bitcast in place — shape-preserving, free)]
+                      [scale words (has_scale codecs, layers words)]
+
+    Sub-word value dtypes (bf16/int16/int8) do NOT bitcast into the word
+    stream — the pad/reshape/bitcast round trip materializes real copies.
+    They ride a COMPANION all_gather per bucket in their native dtype
+    (all sparse leaves share one codec, hence one wire dtype), exactly
+    like the sync barrier's value collective but scoped to the bucket.
+
+    Every segment offset is a trace-time constant from the LeafPlan, so
+    the receiver needs no handshake: RICE word counts are read from the
+    in-band header (still decode-authoritative — they zero the capacity
+    padding before rice_decode exactly like the phase-one vector did),
+    values are codec-decoded with their own worker's scale, and one
+    scatter-add per bucket accumulates every leaf (blocks disjoint,
+    offsets applied at decode) in worker-major order — the same
+    per-coordinate reduction order as ``_bucketed_sync`` and the dense
+    psum, which is what keeps all three bit-identical.
+    """
+    m = _axis_size(axis)
+    codec = cfg.scheme().codec
+    out: list = [None] * len(items)
+    wire = 0.0
+    overflow = jnp.asarray(0, jnp.int32)
+
+    dense_ids = [i for i, (kind, _) in enumerate(items) if kind == "dense"]
+    sparse_ids = [i for i, (kind, _) in enumerate(items) if kind == "sparse"]
+
+    # --- pack + issue, reverse-backward order ---------------------------
+    # buckets: list of (segs, stream, vstream|None) where segs =
+    # [(item id, LeafPlan, word offset, fused value word count, wire
+    #   dtype, companion-stream element offset)] — vwords > 0 means the
+    # values are bitcast into the word stream (4-byte dtypes), velems0
+    # >= 0 means they ride the companion native-dtype stream.
+    buckets: list = []
+    cur_parts: list = []
+    cur_vparts: list = []
+    cur_segs: list = []
+    cur_words = cur_velems = 0
+    cap_bytes = max(4, cfg.overlap_bucket_bytes)
+
+    def flush():
+        nonlocal cur_parts, cur_vparts, cur_segs, cur_words, cur_velems
+        if cur_segs:
+            stream = (cur_parts[0] if len(cur_parts) == 1
+                      else jnp.concatenate(cur_parts))
+            vstream = None
+            if cur_vparts:
+                vstream = (cur_vparts[0] if len(cur_vparts) == 1
+                           else jnp.concatenate(cur_vparts))
+            buckets.append((cur_segs, stream, vstream))
+        cur_parts, cur_vparts, cur_segs = [], [], []
+        cur_words = cur_velems = 0
+
+    for i in reversed(sparse_ids):
+        sg = items[i][1]
+        lp = wire_layout.plan(sg)
+        # per-leaf blocks: the int32 guard is per leaf, not per bucket
+        compaction.check_bucket_coords(lp.block, 1)
+        wdt = jnp.dtype(sg.values.dtype)
+        v2d, w2d, nw = wire_layout.pack(sg, lp)
+        parts = []
+        if lp.layout == "rice":
+            parts.append(nw.reshape(-1))                       # counts header
+            wire += float(lp.layers * 4)
+            wire = wire + 4.0 * jnp.sum(nw).astype(jnp.float32)
+        else:
+            wire += float(lp.layers * lp.idx_len * 4)
+        if lp.idx_len:
+            if lp.layout == "coo":
+                # layer strides only: coordinates are leaf-block-local
+                w2d = w2d + (jnp.arange(lp.layers, dtype=jnp.int32)
+                             * lp.d)[:, None]
+            parts.append(w2d.reshape(-1))
+        n_vals = lp.layers * lp.val_len
+        if wdt.itemsize == 4:
+            vwords, velems0 = _words_of(n_vals, wdt), -1
+            parts.append(_word_pack(v2d))
+        else:
+            vwords, velems0 = 0, cur_velems
+        wire += float(n_vals) * wdt.itemsize
+        if codec.has_scale:
+            parts.append(_word_pack(jnp.asarray(sg.scale, jnp.float32)
+                                    .reshape(-1)))
+            wire += float(lp.layers * 4)
+        overflow = overflow + jnp.sum(sg.overflow())
+        n_words = sum(p.shape[0] for p in parts)
+        n_bytes = n_words * 4 + (0 if vwords else n_vals * wdt.itemsize)
+        if (cur_words or cur_velems) and \
+                cur_words * 4 + cur_velems * wdt.itemsize + n_bytes > cap_bytes:
+            flush()
+            velems0 = min(velems0, 0)                  # offset in new bucket
+        cur_segs.append((i, lp, cur_words, vwords, wdt, velems0))
+        cur_parts.extend(parts)
+        cur_words += n_words
+        if not vwords:
+            cur_vparts.append(v2d.reshape(-1))
+            cur_velems += n_vals
+    flush()
+
+    pending = [(segs, jax.lax.all_gather(stream, axis, tiled=False),
+                None if vstream is None
+                else jax.lax.all_gather(vstream, axis, tiled=False))
+               for segs, stream, vstream in buckets]
+
+    if dense_ids:
+        # tiny-leaf psum, issued after the sparse buckets so the sparse
+        # collectives lead the schedule; f32 like _bucketed_sync
+        flat = jnp.concatenate(
+            [items[i][1].reshape(-1).astype(jnp.float32) for i in dense_ids])
+        synced = jax.lax.pmean(flat, axis)
+        off = 0
+        for i in dense_ids:
+            leaf = leaves[i]
+            out[i] = (synced[off:off + leaf.size].reshape(leaf.shape)
+                      .astype(leaf.dtype))
+            off += leaf.size
+        wire += float(flat.size * 4)
+
+    # --- consume, same order the buckets were issued --------------------
+    # One scatter-add per BUCKET, like the sync barrier's per-bucket
+    # scatter: leaf blocks are disjoint, so accumulating them together
+    # keeps the exact worker-major per-coordinate add order of the
+    # per-leaf formulation while running one scatter instead of
+    # len(segs). Wire index words stay leaf-block-local (the documented
+    # format); the bucket-local block offset is applied at decode.
+    for segs, gs, gv in pending:
+        compaction.check_bucket_coords(sum(s[1].block for s in segs),
+                                       len(segs))
+        upd_parts, coord_parts = [], []
+        block_off = 0
+        # scale-free codecs: one bucket-wide cast of the companion value
+        # stream (sync casts its whole value buffer once too) — per-leaf
+        # casts of sub-word dtypes cost XLA CPU a pass per leaf
+        gvf = (gv.astype(jnp.float32)
+               if gv is not None and not codec.has_scale else None)
+        for (i, lp, w0, vwords, wdt, velems0) in segs:
+            pos = w0
+            wcnt = wseg = None
+            if lp.layout == "rice":
+                wcnt = gs[:, pos:pos + lp.layers]
+                pos += lp.layers
+            if lp.idx_len:
+                wseg = gs[:, pos:pos + lp.layers * lp.idx_len]
+                pos += lp.layers * lp.idx_len
+            n_vals = lp.layers * lp.val_len
+            if vwords:
+                enc = _word_unpack(gs[:, pos:pos + vwords], wdt, n_vals)
+                pos += vwords
+            else:       # companion stream, native dtype — plain slice
+                enc = (gvf if gvf is not None
+                       else gv)[:, velems0:velems0 + n_vals]
+            if codec.has_scale:
+                scales = _word_unpack(gs[:, pos:pos + lp.layers],
+                                      jnp.float32, lp.layers)
+                # per-(worker, layer) scale broadcast over the layer's
+                # value slots — elementwise, so bitwise the same decode
+                # as sync's slot_map expansion
+                decoded = codec.decode(
+                    enc.reshape(m, lp.layers, lp.val_len),
+                    scales[:, :, None]).reshape(m, -1)
+            else:
+                decoded = enc.astype(jnp.float32)
+            upd, crd = wire_layout.unpack_gathered(lp, decoded, wseg,
+                                                   block_off, wcounts=wcnt)
+            if lp.layout == "coo":
+                # coo coords come straight off the wire (leaf-local)
+                crd = crd + jnp.int32(block_off)
+            upd_parts.append(upd)
+            coord_parts.append(crd)
+            block_off += lp.block
+        dense = jnp.zeros((block_off,), jnp.float32)
+        dense = dense.at[
+            jnp.concatenate(coord_parts, axis=1).reshape(-1)].add(
+            jnp.concatenate(upd_parts, axis=1).reshape(-1), mode="drop") / m
+        off = 0
+        for (i, lp, _, _, _, _) in segs:
+            leaf = leaves[i]
+            out[i] = (dense[off:off + lp.block].reshape(leaf.shape)
+                      .astype(leaf.dtype))
+            off += lp.block
+
+    return out, wire, overflow
+
+
+def _exchange_fn(cfg: CompressionConfig):
+    return _overlapped_sync if cfg.exchange == "overlap" else _bucketed_sync
+
+
 def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
               data_axis: Axis = "data", pod_axis: str | None = None,
               stacked: Any | None = None,
@@ -382,8 +652,8 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
         items, new_res, _, stats = compress_tree_sparse(cfg, key, grads,
                                                         stacked=stacked,
                                                         residual=residual)
-        out_leaves, wire_intra, overflow = _bucketed_sync(items, leaves,
-                                                          data_axis, cfg)
+        out_leaves, wire_intra, overflow = _exchange_fn(cfg)(items, leaves,
+                                                             data_axis, cfg)
         synced = jax.tree_util.tree_unflatten(treedef, out_leaves)
 
     # Algorithm 1 step 7 (optional re-sparsification) -> inter-pod stage.
@@ -420,7 +690,7 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
                     new_res = jax.tree.map(
                         lambda r, d: r + d, new_res,
                         jax.tree_util.tree_unflatten(treedef, drops))
-            out_leaves, wire_inter, ovf2 = _bucketed_sync(
+            out_leaves, wire_inter, ovf2 = _exchange_fn(cfg)(
                 items2, synced_leaves, pod_axis, cfg)
             synced = jax.tree_util.tree_unflatten(treedef, out_leaves)
             overflow = overflow + ovf2

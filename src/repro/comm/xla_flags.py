@@ -1,0 +1,139 @@
+"""XLA comm-tuning presets for the overlapped sparse exchange.
+
+The overlapped exchange (``CompressionConfig.exchange="overlap"``,
+repro.comm.sync) issues each bucket's collective as soon as its leaves are
+packed — but whether the compiled schedule actually runs that collective
+concurrently with the remaining packing work is the scheduler's call.
+These presets name the XLA flag sets that make the issue-order overlap
+real on accelerator backends: async collective lowering and the
+latency-hiding scheduler. They are applied by merging into the
+``XLA_FLAGS`` environment variable BEFORE the first jax backend
+initialization (jax reads it exactly once); ``CompressionConfig`` records
+and validates the chosen preset, the launchers (repro.launch.train /
+dryrun) call :func:`apply`, and ``scripts/hillclimb.py`` sweeps presets by
+forwarding ``--xla-preset`` to the dryrun.
+
+Flag portability: XLA *aborts the process* on unknown ``XLA_FLAGS``
+entries, and the TPU runtime registers flags the open-source CPU/GPU
+builds do not have — merely having the ``libtpu`` *package* installed
+(this container does) does not make the CPU parser accept them. Every
+preset therefore splits into a portable ``DebugOptions`` part (parses on
+every build — verified against the pinned CPU toolchain) that
+:func:`apply` merges into ``XLA_FLAGS``, and a ``tpu`` part that rides
+``LIBTPU_INIT_ARGS`` instead: the TPU runtime reads that variable at
+init, every other build never looks at it, so a TPU-only flag can never
+abort a CPU/GPU process no matter how the runtime is detected.
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import warnings
+
+# Portable DebugOptions flags (parse on CPU/GPU/TPU builds alike). The
+# xla_gpu_* prefix is historical — the latency-hiding scheduler and the
+# collective combiner thresholds live in the shared DebugOptions proto.
+_ASYNC_PORTABLE = {
+    "--xla_gpu_enable_highest_priority_async_stream": "true",
+    # combine many small all_gathers up to the overlap bucket scale: the
+    # fused bucket streams are already combined at the source, this keeps
+    # XLA from re-splitting them
+    "--xla_gpu_all_gather_combine_threshold_bytes": str(1 << 20),
+}
+_LHS_PORTABLE = {
+    "--xla_gpu_enable_latency_hiding_scheduler": "true",
+    "--xla_gpu_enable_pipelined_collectives": "true",
+    "--xla_gpu_enable_pipelined_all_gather": "true",
+}
+# TPU-runtime-only flags (libtpu registers them; absent from open-source
+# builds, where they would abort flag parsing).
+_ASYNC_TPU = {
+    "--xla_tpu_enable_async_collective_fusion": "true",
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather": "true",
+}
+_LHS_TPU = {
+    "--xla_tpu_overlap_compute_collective_tc": "true",
+    "--xla_latency_hiding_scheduler_rerun": "1",
+}
+
+PRESETS: dict[str, tuple[dict, dict]] = {
+    # (portable flags, tpu-only flags)
+    "none": ({}, {}),
+    "async": (_ASYNC_PORTABLE, _ASYNC_TPU),
+    "latency_hiding": (_LHS_PORTABLE, _LHS_TPU),
+    "overlap": ({**_ASYNC_PORTABLE, **_LHS_PORTABLE},
+                {**_ASYNC_TPU, **_LHS_TPU}),
+}
+
+
+def _tpu_runtime_present() -> bool:
+    return importlib.util.find_spec("libtpu") is not None
+
+
+def flags_for(preset: str, include_tpu: bool | None = None) -> dict:
+    """The ``{flag: value}`` set a preset expands to on this runtime.
+    ``include_tpu=None`` auto-detects libtpu. Informational — ``apply``
+    never puts the TPU part in ``XLA_FLAGS``, it rides
+    ``LIBTPU_INIT_ARGS`` where only a TPU runtime reads it."""
+    try:
+        portable, tpu = PRESETS[preset]
+    except KeyError:
+        raise ValueError(f"unknown xla_preset {preset!r}; "
+                         f"have {tuple(sorted(PRESETS))}") from None
+    if include_tpu is None:
+        include_tpu = _tpu_runtime_present()
+    return {**portable, **(tpu if include_tpu else {})}
+
+
+def as_flag_string(flags: dict) -> str:
+    return " ".join(f"{k}={v}" for k, v in flags.items())
+
+
+def _merge_env_flags(env: dict, var: str, flags: dict) -> None:
+    """Append ``flags`` to the space-separated ``env[var]``; a flag name
+    already present wins over the preset (explicit user flags outrank
+    presets), so apply() is also idempotent."""
+    current = env.get(var, "")
+    present = {tok.split("=", 1)[0] for tok in current.split() if tok}
+    extra = [f"{k}={v}" for k, v in flags.items() if k not in present]
+    if extra:
+        env[var] = (current + " " + " ".join(extra)).strip()
+
+
+def apply(preset: str, env: dict | None = None) -> dict:
+    """Merge a preset into the environment (default: ``os.environ``):
+    the portable part into ``XLA_FLAGS``, the TPU-only part into
+    ``LIBTPU_INIT_ARGS`` (and only when libtpu is importable — pointless
+    otherwise, harmless either way: nothing but the TPU runtime reads
+    it, so it can never abort a CPU/GPU flag parse).
+
+    Must run before the first jax backend init — jax snapshots XLA_FLAGS
+    exactly once; a late apply() silently changes nothing, so it warns.
+    Returns the flag dict that was merged.
+    """
+    try:
+        portable, tpu = PRESETS[preset]
+    except KeyError:
+        raise ValueError(f"unknown xla_preset {preset!r}; "
+                         f"have {tuple(sorted(PRESETS))}") from None
+    include_tpu = bool(tpu) and _tpu_runtime_present()
+    flags = {**portable, **(tpu if include_tpu else {})}
+    if env is None:
+        env = os.environ
+    if flags:
+        import sys
+        jaxlib = sys.modules.get("jax")
+        if jaxlib is not None and getattr(
+                getattr(jaxlib, "_src", None), "xla_bridge", None) is not None:
+            backends = getattr(jaxlib._src.xla_bridge, "_backends", None)
+            if backends:
+                warnings.warn(
+                    f"xla_flags.apply({preset!r}): a jax backend is already "
+                    "initialized; XLA_FLAGS was read once at init and these "
+                    "flags will NOT take effect this process. Apply the "
+                    "preset before the first jax.devices()/jit call.",
+                    stacklevel=2)
+    _merge_env_flags(env, "XLA_FLAGS", portable)
+    if include_tpu:
+        _merge_env_flags(env, "LIBTPU_INIT_ARGS", tpu)
+    return flags

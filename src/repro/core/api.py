@@ -52,6 +52,25 @@ class CompressionConfig:
     undercut the choice; see repro.comm.wire_layout). ``"auto"`` is that
     argmin; a concrete name forces one layout everywhere.
 
+    ``exchange`` picks how the sparse wires realize their collectives:
+    ``"sync"`` is the classic end-of-step barrier (one concatenated
+    coordinate space, one all_gather set per wire-dtype bucket, RICE
+    counts on a separate phase-one collective); ``"overlap"`` restructures
+    the exchange into per-bucket fused word streams issued in
+    reverse-backward leaf order — each bucket's single collective starts
+    as soon as its leaves are packed, with RICE's phase-one counts riding
+    in-band at a static header offset (see repro.comm.sync). Both modes
+    are bit-identical and charge identical wire bytes; ``exchange`` only
+    changes collective structure and issue order. ``overlap_bucket_bytes``
+    caps one overlapped bucket's payload (smaller = more buckets = finer
+    comm/compute pipelining on a real interconnect).
+
+    ``xla_preset`` names an XLA comm-tuning preset
+    (repro.comm.xla_flags): flag sets that make the overlapped issue
+    order actually overlap in the compiled schedule (async collectives,
+    latency-hiding scheduler). The launchers apply it to XLA_FLAGS before
+    backend init; the config only records/validates the choice.
+
     Invalid combinations (e.g. error feedback on the residual-free
     identity∘f32) raise here, at construction time — never silently
     degrade at run time.
@@ -77,11 +96,26 @@ class CompressionConfig:
                                      # realized bytes per leaf
     capacity_slack: float = 1.25     # k_cap slack over the selector's rho target
     resparsify_pods: bool = False    # Alg.1 step 7 -> hierarchical pod-level resync
+    exchange: str = "sync"           # sync | overlap — sparse collective structure
+    overlap_bucket_bytes: int = 1 << 20  # payload cap per overlapped bucket
+    xla_preset: str = "none"         # XLA comm-tuning preset (repro.comm.xla_flags)
 
     def __post_init__(self):
         if self.wire not in ("dense", "gather", "packed"):
             raise ValueError(f"unknown wire format {self.wire!r}; "
                              "have ('dense', 'gather', 'packed')")
+        if self.exchange not in ("sync", "overlap"):
+            raise ValueError(f"unknown exchange mode {self.exchange!r}; "
+                             "have ('sync', 'overlap')")
+        if self.overlap_bucket_bytes < 4:
+            raise ValueError(
+                f"overlap_bucket_bytes={self.overlap_bucket_bytes} is below "
+                "one int32 word; the overlapped exchange cannot ship a "
+                "zero-byte bucket")
+        from repro.comm.xla_flags import PRESETS   # leaf module, no cycle
+        if self.xla_preset not in PRESETS:
+            raise ValueError(f"unknown xla_preset {self.xla_preset!r}; "
+                             f"have {tuple(sorted(PRESETS))}")
         if self.wire_layout not in ("auto", "coo", "bitmap", "dense",
                                     "rice"):
             raise ValueError(f"unknown wire layout {self.wire_layout!r}; "

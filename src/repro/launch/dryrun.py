@@ -1,4 +1,5 @@
 import os
+import sys as _sys
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
                            # XLA-CPU's all-reduce-promotion pass segfaults on
                            # bf16 all-reduces (host backend only; TPU is the
@@ -6,6 +7,17 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
                            # workaround and does not change the lowered HLO we
                            # analyze.
                            "--xla_disable_hlo_passes=all-reduce-promotion")
+# --xla-preset must land in XLA_FLAGS before the jax import below (jax reads
+# it once at first init), so it is scanned from argv here, ahead of argparse;
+# main() re-parses it for validation/recording. repro.comm.xla_flags is
+# jax-free, so importing it here keeps the env-before-import invariant.
+for _i, _a in enumerate(_sys.argv):
+    if _a == "--xla-preset" and _i + 1 < len(_sys.argv):
+        from repro.comm.xla_flags import apply as _apply_xla_preset
+        _apply_xla_preset(_sys.argv[_i + 1])
+    elif _a.startswith("--xla-preset="):
+        from repro.comm.xla_flags import apply as _apply_xla_preset
+        _apply_xla_preset(_a.split("=", 1)[1])
 
 """Multi-pod dry-run (deliverable e): lower + compile every
 (architecture x input-shape x mesh) combination against the production mesh
@@ -93,7 +105,7 @@ def _probe_variant(cfg: "tf.ModelConfig", periods: int) -> "tf.ModelConfig":
 
 def _build_lowered(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
                    compressor, rho, shard_local_sync=True,
-                   backend="reference"):
+                   backend="reference", exchange="sync"):
     """Lower one step for the given (possibly probe-modified) config."""
     seq, global_batch, kind = registry.SHAPES[shape_name]
     param_rules = build_rules(spec, multi_pod, for_state=(mode == "fsdp"))
@@ -112,7 +124,8 @@ def _build_lowered(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
                                                       multi_pod)
             key_sds = jax.eval_shape(lambda: jax.random.key(0))
             comp = CompressionConfig(name=compressor, rho=rho, wire=wire,
-                                     backend=backend, min_leaf_size=4096)
+                                     backend=backend, exchange=exchange,
+                                     min_leaf_size=4096)
             if mode == "compressed":
                 step = step_lib.make_compressed_train_step(
                     cfg, comp, opt, mesh, act_rules, multi_pod=multi_pod,
@@ -151,14 +164,14 @@ def _build_lowered(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
 
 def _probe_costs(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
                  compressor, rho, shard_local_sync=True,
-                 backend="reference"):
+                 backend="reference", exchange="sync"):
     """(flops, bytes, collective_bytes) per extra period + 1-period base."""
     out = []
     for periods in (1, 2):
         pcfg = _probe_variant(cfg, periods)
         lowered, _ = _build_lowered(pcfg, spec, shape_name, mesh, multi_pod,
                                     mode, wire, compressor, rho,
-                                    shard_local_sync, backend)
+                                    shard_local_sync, backend, exchange)
         with jax.set_mesh(mesh):
             compiled = lowered.compile()
         r = analysis.analyze(compiled)
@@ -174,7 +187,7 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                train_mode: str | None = None, probe: bool = True,
                attn_impl: str | None = None, q_chunk: int | None = None,
                kv_chunk: int | None = None, shard_local_sync: bool = True,
-               backend: str = "reference"):
+               backend: str = "reference", exchange: str = "sync"):
     """Lower+compile one (arch, shape, mesh) combination. Returns a record."""
     spec = registry.get(arch)
     if shape_name not in spec.shapes:
@@ -195,12 +208,14 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
     record = {"arch": arch, "shape": shape_name,
               "mesh": "2x16x16" if multi_pod else "16x16",
               "kind": kind, "train_mode": mode if kind == "train" else "-",
-              "wire": wire if kind == "train" else "-"}
+              "wire": wire if kind == "train" else "-",
+              "exchange": exchange if kind == "train" else "-"}
 
     t0 = time.time()
     lowered, params_sds = _build_lowered(cfg, spec, shape_name, mesh,
                                          multi_pod, mode, wire, compressor,
-                                         rho, shard_local_sync, backend)
+                                         rho, shard_local_sync, backend,
+                                         exchange)
     record["lower_s"] = round(time.time() - t0, 1)
     t1 = time.time()
     with jax.set_mesh(mesh):
@@ -217,7 +232,7 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
         t2 = time.time()
         base, delta = _probe_costs(cfg, spec, shape_name, mesh, multi_pod,
                                    mode, wire, compressor, rho,
-                                   shard_local_sync, backend)
+                                   shard_local_sync, backend, exchange)
         record["probe_s"] = round(time.time() - t2, 1)
         n_extra = cfg.num_periods - 1
         flops = base[0] + n_extra * delta[0]
@@ -273,6 +288,13 @@ def main(argv=None):
     ap.add_argument("--backend", default="reference",
                     choices=["auto", "reference", "pallas"])
     ap.add_argument("--rho", type=float, default=0.01)
+    ap.add_argument("--exchange", default="sync",
+                    choices=["sync", "overlap"],
+                    help="sparse collective structure (see repro.comm.sync)")
+    ap.add_argument("--xla-preset", default="none",
+                    choices=["none", "async", "latency_hiding", "overlap"],
+                    help="XLA comm-tuning preset; consumed by the module-top "
+                         "argv scan before jax loads, recorded here")
     ap.add_argument("--remat", default=None)
     ap.add_argument("--train-mode", default=None,
                     choices=[None, "compressed", "fsdp"])
@@ -297,7 +319,8 @@ def main(argv=None):
                      probe=not args.no_probe, attn_impl=args.attn_impl,
                      q_chunk=args.q_chunk, kv_chunk=args.kv_chunk,
                      shard_local_sync=not args.global_sync,
-                     backend=args.backend)
+                     backend=args.backend, exchange=args.exchange)
+    rec["xla_preset"] = args.xla_preset
     print(json.dumps(rec, indent=2, default=str))
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

@@ -57,6 +57,20 @@ def main(argv=None):
                          "bitmap, index-elided dense value run, or "
                          "Golomb-Rice delta-coded index stream shipped via "
                          "the two-phase exchange)")
+    ap.add_argument("--exchange", default="sync",
+                    choices=["sync", "overlap"],
+                    help="sparse collective structure: end-of-step barrier "
+                         "or overlapped per-bucket exchange (fused word "
+                         "streams issued in reverse-backward order)")
+    ap.add_argument("--overlap-bucket-bytes", type=int, default=1 << 20,
+                    help="payload cap per overlapped bucket (smaller = "
+                         "finer comm/compute pipelining)")
+    ap.add_argument("--xla-preset", default="none",
+                    choices=["none", "async", "latency_hiding", "overlap"],
+                    help="XLA comm-tuning flag preset "
+                         "(repro.comm.xla_flags), applied before backend "
+                         "init so async collectives / the latency-hiding "
+                         "scheduler realize the overlapped issue order")
     ap.add_argument("--error-feedback", action="store_true",
                     help="carry the per-worker compression residual "
                          "(memory: one params-sized buffer per worker)")
@@ -69,6 +83,12 @@ def main(argv=None):
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+
+    if args.xla_preset != "none":
+        # before the first backend touch (jax.devices() below inits XLA)
+        from repro.comm.xla_flags import apply as apply_xla_preset
+        applied = apply_xla_preset(args.xla_preset)
+        print(f"xla_preset={args.xla_preset}: {len(applied)} flag(s)")
 
     spec = registry.get(args.arch)
     cfg = spec.smoke if args.smoke else spec.model
@@ -103,9 +123,12 @@ def main(argv=None):
                              wire=args.wire, wire_layout=args.wire_layout,
                              backend=args.backend,
                              error_feedback=args.error_feedback,
+                             exchange=args.exchange,
+                             overlap_bucket_bytes=args.overlap_bucket_bytes,
+                             xla_preset=args.xla_preset,
                              min_leaf_size=1024)
     print(f"compression: {comp.scheme().name} wire={comp.wire} "
-          f"layout={comp.wire_layout}")
+          f"layout={comp.wire_layout} exchange={comp.exchange}")
     ef_state = None
     if comp.error_feedback:
         # compressed mode: stacked per-worker residual; fsdp: params-shaped

@@ -1,0 +1,79 @@
+"""XLA comm-preset env merging (repro.comm.xla_flags) — pure env-dict
+logic, no jax backend touched. The load-bearing invariant: TPU-only
+flags must NEVER land in XLA_FLAGS, because XLA aborts the whole process
+on unknown flags and the open-source CPU/GPU parsers do not register
+them (having the libtpu *package* installed, as this container does,
+does not change that). They ride LIBTPU_INIT_ARGS, which only a real
+TPU runtime reads."""
+import pytest
+
+from repro.comm import xla_flags
+
+
+def _tpu_flag_names():
+    names = set()
+    for _, tpu in xla_flags.PRESETS.values():
+        names.update(tpu)
+    return names
+
+
+@pytest.mark.parametrize("preset", sorted(xla_flags.PRESETS))
+def test_tpu_flags_never_reach_xla_flags(preset):
+    env = {}
+    xla_flags.apply(preset, env)
+    xla_words = {tok.split("=", 1)[0]
+                 for tok in env.get("XLA_FLAGS", "").split() if tok}
+    assert not xla_words & _tpu_flag_names(), (
+        "TPU-only flags in XLA_FLAGS abort CPU/GPU processes")
+    portable, _ = xla_flags.PRESETS[preset]
+    assert xla_words == set(portable)
+
+
+def test_apply_is_idempotent_and_preserves_user_flags():
+    env = {"XLA_FLAGS":
+           "--xla_force_host_platform_device_count=8 "
+           "--xla_gpu_enable_latency_hiding_scheduler=false"}
+    xla_flags.apply("latency_hiding", env)
+    once = dict(env)
+    xla_flags.apply("latency_hiding", env)
+    assert env == once
+    toks = env["XLA_FLAGS"].split()
+    # user's explicit value outranks the preset, and is not duplicated
+    assert toks.count("--xla_gpu_enable_latency_hiding_scheduler=false") == 1
+    assert all(not t.startswith("--xla_gpu_enable_latency_hiding_scheduler=")
+               or t.endswith("=false") for t in toks)
+    assert "--xla_force_host_platform_device_count=8" in toks
+
+
+def test_tpu_part_rides_libtpu_init_args_when_runtime_present(monkeypatch):
+    monkeypatch.setattr(xla_flags, "_tpu_runtime_present", lambda: True)
+    env = {}
+    merged = xla_flags.apply("overlap", env)
+    libtpu_words = {tok.split("=", 1)[0]
+                    for tok in env.get("LIBTPU_INIT_ARGS", "").split() if tok}
+    portable, tpu = xla_flags.PRESETS["overlap"]
+    assert libtpu_words == set(tpu)
+    assert merged == {**portable, **tpu}
+    # and still nothing TPU-only in XLA_FLAGS
+    assert not ({tok.split("=", 1)[0]
+                 for tok in env["XLA_FLAGS"].split()} & set(tpu))
+
+
+def test_no_libtpu_no_init_args(monkeypatch):
+    monkeypatch.setattr(xla_flags, "_tpu_runtime_present", lambda: False)
+    env = {}
+    merged = xla_flags.apply("overlap", env)
+    assert "LIBTPU_INIT_ARGS" not in env
+    portable, _ = xla_flags.PRESETS["overlap"]
+    assert merged == dict(portable)
+
+
+def test_unknown_preset_raises():
+    with pytest.raises(ValueError, match="unknown xla_preset"):
+        xla_flags.apply("warp_speed", {})
+
+
+def test_none_preset_touches_nothing():
+    env = {}
+    assert xla_flags.apply("none", env) == {}
+    assert env == {}
