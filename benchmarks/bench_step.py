@@ -74,6 +74,72 @@ def _model_tree(quick: bool):
     return grads, stacked
 
 
+def _stage_breakdown(cfg, args, stacked, iters: int) -> dict:
+    """Per-stage attribution of one (wire, layout) row's step time:
+    ``compress`` (backend selection + codec encode into compact buffers),
+    ``pack`` (wire_layout encode of every sparse leaf into its streams),
+    ``apply`` (codec decode + layout unpack + scatter-add of the received
+    streams), each timed as its own jitted function over the same tree.
+    ``collective`` is the residual of the full step over those three — on
+    a single-host mesh that is the gather memcpys plus the bucket
+    concat/slice glue, exactly the part the overlapped exchange
+    restructures. Stages re-run the real pipeline functions (per leaf, one
+    worker), so the split attributes compute vs wire honestly even though
+    a fused end-to-end jit may overlap some of it."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm import wire_layout
+    from repro.core import codecs as codecs_lib
+    from repro.core.api import compress_tree_sparse
+
+    key, grads = args
+
+    @jax.jit
+    def compress(k, g):
+        items, _, _, _ = compress_tree_sparse(cfg, k, g, stacked=stacked)
+        return [sg for kind, sg in items if kind == "sparse"]
+
+    sgs = compress(key, grads)
+    jax.block_until_ready(sgs[0].values)
+    plans = [wire_layout.plan(sg) for sg in sgs]
+
+    @jax.jit
+    def pack(sgs):
+        return [wire_layout.pack(sg, lp) for sg, lp in zip(sgs, plans)]
+
+    packed = pack(sgs)
+    jax.block_until_ready(packed[0][0])
+
+    @jax.jit
+    def apply_(sgs, packed):
+        dense = []
+        for sg, lp, (v, w, n) in zip(sgs, plans, packed):
+            codec = codecs_lib.get(sg.codec)
+            decoded = codec.decode(v, sg.scale).reshape(1, -1)
+            wcounts = n.reshape(1, -1) if lp.layout == "rice" else None
+            upd, coords = wire_layout.unpack_gathered(
+                lp, decoded, None if lp.layout == "dense" else w.reshape(1, -1),
+                0, wcounts)
+            dense.append(jnp.zeros((lp.block,), jnp.float32)
+                         .at[coords.reshape(-1)]
+                         .add(upd.reshape(-1), mode="drop"))
+        return dense
+
+    out = apply_(sgs, packed)
+    jax.block_until_ready(out[0])
+
+    compress_us = timed_us_min(
+        lambda: jax.block_until_ready(compress(key, grads)[0].values),
+        iters=iters)
+    pack_us = timed_us_min(
+        lambda: jax.block_until_ready(pack(sgs)[0][0]), iters=iters)
+    apply_us = timed_us_min(
+        lambda: jax.block_until_ready(apply_(sgs, packed)[0]), iters=iters)
+    return {"compress_us": compress_us, "pack_us": pack_us,
+            "apply_us": apply_us}
+
+
 def _timed_pair_us(fn_a, fn_b, iters: int) -> tuple[float, float]:
     """Interleaved min-of-N: alternate the two variants every round so
     machine-load noise hits both equally; return (min_a_us, min_b_us)."""
@@ -90,7 +156,7 @@ def _timed_pair_us(fn_a, fn_b, iters: int) -> tuple[float, float]:
 
 
 def run(quick: bool = False, return_payload: bool = False,
-        strict: bool = False):
+        strict: bool = False, breakdown: bool = False):
     import repro  # noqa: F401  (jax compat shims)
     import jax
     import jax.numpy as jnp
@@ -180,6 +246,26 @@ def run(quick: bool = False, return_payload: bool = False,
                 f"({overlap_us:.0f}us) did not beat the sync barrier "
                 f"({sync_us:.0f}us) — do not commit this baseline")
 
+    # per-stage attribution runs AFTER every row is timed: the extra jit
+    # compiles and live buffers it creates must not perturb the gated
+    # wall-clock numbers above
+    if breakdown:
+        for wire, layout, _ in ROWS:
+            cfg_s = CompressionConfig(name="gspar", rho=0.01, wire=wire,
+                                      wire_layout=layout, min_leaf_size=256,
+                                      backend="reference", exchange="sync")
+            with jax.set_mesh(mesh):
+                stages = _stage_breakdown(cfg_s, args, stacked, iters)
+            sync_us = payload[f"step:{wire}:{layout}:sync"]["us_per_step"]
+            stages["collective_us"] = max(
+                0.0, sync_us - sum(stages.values()))
+            stages["total_us"] = sync_us
+            payload[f"breakdown:{wire}:{layout}"] = stages
+            rows.append((f"breakdown:{wire}:{layout}", sync_us,
+                         ";".join(f"{k.removesuffix('_us')}={v:.0f}us"
+                                  for k, v in stages.items()
+                                  if k != "total_us")))
+
     save_json("step", payload)
     return (rows, payload) if return_payload else rows
 
@@ -197,9 +283,14 @@ if __name__ == "__main__":
     ap.add_argument("--strict", action="store_true",
                     help="assert overlap < sync on the gated rows (baseline "
                          "regeneration mode)")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="add per-stage rows (compress/pack/collective/"
+                         "apply) attributing each sync row's wall clock "
+                         "to compute vs wire")
     cli = ap.parse_args()
     bench_rows, bench_payload = run(quick=cli.quick, return_payload=True,
-                                    strict=cli.strict)
+                                    strict=cli.strict,
+                                    breakdown=cli.breakdown)
     emit(bench_rows)
     if cli.json:
         path = os.path.join(REPO_ROOT, "BENCH_step.json")

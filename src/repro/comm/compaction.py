@@ -103,9 +103,13 @@ def coordinate_order(vals: jax.Array, idx: jax.Array, d: int,
 
     Generic path (``nnz=None``): a slot is live iff its value is nonzero
     (compaction padding and codec-zeroed levels reconstruct to zero by
-    absence either way); one argsort orders values and keys together.
-    Live coordinates are unique by construction (one top_k / one counting
-    pass per leaf).
+    absence either way). Live coordinates are unique by construction (one
+    top_k / one counting pass per leaf), so instead of one argsort over
+    (key, value) pairs the keys sort alone and each value finds its slot
+    by rank (a binary search against the sorted keys) — measurably
+    cheaper than the pair sort on CPU XLA, and bit-identical: dead slots
+    all carry value zero, so their (arbitrary) ordering within the tail
+    is unobservable.
 
     Sorted path (``nnz`` given): for buffers whose valid prefix
     (``min(nnz, k_cap)`` slots) is already in ascending coordinate order
@@ -116,10 +120,14 @@ def coordinate_order(vals: jax.Array, idx: jax.Array, d: int,
     to exactly zero.
     """
     flat = vals.reshape(-1)
+    k = flat.shape[0]
     if nnz is None:
         key = jnp.where(flat != 0, idx.reshape(-1), jnp.int32(d))
-        order = jnp.argsort(key)
-        return flat[order], key[order]
+        sidx = jnp.sort(key)
+        pos = jnp.searchsorted(sidx, key, side="left").astype(jnp.int32)
+        pos = jnp.where(key < d, pos, jnp.int32(k))  # dead slots: drop
+        svals = jnp.zeros((k,), flat.dtype).at[pos].set(flat, mode="drop")
+        return svals, sidx
     valid = (jnp.arange(flat.shape[0], dtype=jnp.int32)
              < jnp.minimum(nnz, flat.shape[0]))
     return flat, jnp.where(valid, idx.reshape(-1), jnp.int32(d))
@@ -268,19 +276,18 @@ def rice_decode(words: jax.Array, k_cap: int, d: int, r: int) -> jax.Array:
         rem = jnp.zeros(batch + (k_cap,), jnp.int32)
     ub = bits[..., k_cap * r:]
     u_cap = ub.shape[-1]
-    z = ub == 0
     # every 0-bit in the unary region terminates a code; the i-th code's
-    # terminator position is the i-th zero (zero-padding past the encoded
-    # region ranks >= k_cap and is dropped)
-    rank = jnp.cumsum(z.astype(jnp.int32), axis=-1) - 1
-
-    def one(zb, rk):
-        return jnp.zeros((k_cap,), jnp.int32).at[
-            jnp.where(zb, rk, k_cap)].set(
-                jnp.arange(u_cap, dtype=jnp.int32), mode="drop")
-
-    zpos = jax.vmap(one)(z.reshape((-1, u_cap)),
-                         rank.reshape((-1, u_cap))).reshape(batch + (k_cap,))
+    # terminator position is the i-th zero, i.e. the first position where
+    # the inclusive zero-count cumsum reaches i + 1 — a vectorized binary
+    # search per code instead of a (serial-on-CPU) u_cap-wide scatter.
+    # Zero padding past the encoded region only appends zeros, so every
+    # rank < k_cap exists (the capacity bound guarantees >= k_cap zeros).
+    cs = jnp.cumsum((ub == 0).astype(jnp.int32), axis=-1)
+    tgt = jnp.arange(1, k_cap + 1, dtype=jnp.int32)
+    zpos = jax.vmap(
+        lambda c: jnp.searchsorted(c, tgt, side="left"))(
+            cs.reshape((-1, u_cap))).reshape(batch + (k_cap,)).astype(
+                jnp.int32)
     prev = jnp.concatenate(
         [jnp.full(batch + (1,), -1, jnp.int32), zpos[..., :-1]], axis=-1)
     q = zpos - prev - 1

@@ -30,6 +30,26 @@ Registered codecs:
 codecs (the paper's section-5.3 trick keeps both wire paths bit-exact and
 testable); ``u=None`` falls back to deterministic round-to-nearest, used by
 the keyless pod-stage re-compaction.
+
+Kernel-side encode contract
+---------------------------
+The fused pallas backend runs ``encode`` *inside* the compact-write kernel
+tile (``kernels.sparsify.kernel.compact_emit_2d``), so every codec promises:
+
+  1. ``encode``/``decode`` are elementwise given ``scale`` and the
+     per-value uniform — pure jnp ops on the value lane, no reductions, no
+     data-dependent shapes. Encoding a tile and scattering the kept lanes
+     equals encoding the gathered compact buffer, bit for bit, provided
+     the uniforms line up per compact rank.
+  2. The per-message ``scale`` is a streaming reduction described by
+     ``scale_kind``: "none" (no scale), "l2" (sqrt of the sum of squares),
+     or "max" (max absolute value) over the transmitted values. Pass 1 of
+     the two-pass kernel accumulates the raw statistic per tile;
+     ``finalize_scale`` turns it into the codec's scale. Tile-order
+     summation may differ from the reference's single reduction in the
+     last ulp (same contract the compact-buffer encode always had).
+  3. ``encode(0) == 0`` for any scale/uniform, so unselected lanes and
+     capacity padding stay exactly zero on the wire.
 """
 from __future__ import annotations
 
@@ -67,6 +87,7 @@ class FloatCodec:
     stochastic = False
     has_scale = False
     integer_coded = False
+    scale_kind = "none"
 
     @property
     def rounds_values(self) -> bool:
@@ -118,6 +139,7 @@ class QsgdCodec:
     has_scale = True
     integer_coded = True
     rounds_values = True
+    scale_kind = "l2"
 
     def wire_dtype(self, leaf_dtype) -> jnp.dtype:
         return jnp.dtype(jnp.int8 if self.levels <= 127 else jnp.int16)
@@ -159,6 +181,7 @@ class TernaryCodec:
     has_scale = True
     integer_coded = True
     rounds_values = True
+    scale_kind = "max"
 
     def wire_dtype(self, leaf_dtype) -> jnp.dtype:
         return jnp.dtype(jnp.int8)
@@ -176,6 +199,18 @@ class TernaryCodec:
 
     def decode(self, wire_vals: jax.Array, scale: jax.Array) -> jax.Array:
         return wire_vals.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+
+
+def finalize_scale(codec, sum_sq: jax.Array, max_abs: jax.Array) -> jax.Array:
+    """Kernel-side half of the scale contract: fold the pass-1 streaming
+    statistics (sum of squares, max abs over the transmitted values) into
+    the codec's per-message scale. Mirrors ``codec.scale`` on the compact
+    buffer without materializing it."""
+    if codec.scale_kind == "l2":
+        return jnp.sqrt(jnp.asarray(sum_sq, jnp.float32))
+    if codec.scale_kind == "max":
+        return jnp.asarray(max_abs, jnp.float32)
+    return jnp.ones((), jnp.float32)
 
 
 _QSGD_RE = re.compile(r"^qsgd(\d+)$")

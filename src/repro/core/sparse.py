@@ -21,14 +21,16 @@ Backends (``CompressionConfig.backend``):
                the codec draws, and the codec scale are literally the same
                computation — which the dense-vs-gather equivalence tests
                rely on for every composition.
-  pallas    -- fused stats -> lambda -> sample -> compact kernel path from
-               repro.kernels.sparsify (sort-free counting selection) for the
-               gspar/greedy selector; float codecs quantize inside the
-               kernel pass (the kernel's output dtype is the wire dtype),
-               integer codecs encode on the compact k_cap buffer — O(k_cap)
-               work, never a second O(d) pass. Other selectors fall back to
-               reference per leaf. Off-TPU the kernels run in interpreter
-               mode.
+  pallas    -- the two-pass emit pipeline from repro.kernels.sparsify:
+               pass 1 reduces per-tile survivor counts and the codec scale
+               statistic in one traversal, pass 2 writes the codec-encoded
+               compact (values, idx) buffers directly from the tiles, with
+               Golomb-Rice index packing fused into the same output pass
+               under the RICE layout. Covers the gspar (greedy + closed),
+               unisp, topk and bernoulli selectors; identity falls back to
+               reference per leaf. The wire buffer is the kernel's only
+               large output — everything downstream is O(k_cap). Off-TPU
+               the kernels run in interpreter mode.
   auto      -- pallas on TPU, reference elsewhere.
 """
 from __future__ import annotations
@@ -79,6 +81,15 @@ class SparseGrad:
                              # valid-prefix slots ascend by coordinate (the
                              # pallas counting compaction); lets the bitmap
                              # layout pack without an argsort
+    rice_words: jax.Array | None = None
+                             # pre-packed Golomb-Rice index words emitted by
+                             # the fused kernel's output pass (RICE layout on
+                             # the pallas backend only; None elsewhere).
+                             # Bit-identical to compaction.rice_encode on
+                             # (values, idx) — wire_layout.pack ships them
+                             # as-is instead of re-encoding.
+    rice_used: jax.Array | None = None
+                             # used word count of the pre-packed stream
 
     @property
     def k_cap(self) -> int:
@@ -244,117 +255,148 @@ class ReferenceBackend:
 
 
 class PallasBackend:
-    """Fused kernel path (repro.kernels.sparsify) for the gspar/greedy
-    selector; other selectors delegate to the reference implementation
-    leaf-by-leaf. Float codecs quantize inside the kernel pass (the wire
-    dtype is the kernel's output dtype); integer codecs encode on the
-    compact k_cap buffer afterwards — never a second O(d) pass."""
+    """Two-pass fused kernel path (repro.kernels.sparsify): pass 1 reduces
+    per-tile survivor counts and the codec's scale statistic, pass 2 writes
+    the codec-encoded compact ``(values, idx)`` wire buffers straight from
+    the tiles — and, under the RICE layout, bit-packs the Golomb-Rice index
+    stream in the same output pass. The kernel's only large outputs are the
+    wire buffers (plus the in-pass EF residual); everything after it is
+    O(k_cap) accounting, never a second O(d) traversal.
+
+    Fused selectors: gspar (greedy *and* closed-form lambda), unisp, topk,
+    and bernoulli (TernGrad's selection). The identity selector has no
+    sparse structure to exploit and delegates to the reference backend."""
     name = "pallas"
+
+    FUSED_SELECTORS = ("gspar", "unisp", "topk", "bernoulli")
 
     def __init__(self, interpret: bool = False):
         self.interpret = interpret
         self._fallback = ReferenceBackend()
 
-    def _is_fused(self, cfg) -> bool:
-        return cfg.name.split("+")[0] == "gspar" and cfg.algo == "greedy"
+    def _fused_scheme(self, cfg):
+        scheme = cfg.scheme()
+        return scheme if scheme.selector.name in self.FUSED_SELECTORS \
+            else None
 
     def compress_sparse(self, cfg, key, g, k_cap) -> SparseGrad:
-        if not self._is_fused(cfg):
+        scheme = self._fused_scheme(cfg)
+        if scheme is None:
             return self._fallback.compress_sparse(cfg, key, g, k_cap)
-        from repro.kernels.sparsify import ops
-        scheme = cfg.scheme()
-        codec = scheme.codec
-        k_sel, k_cod = scheme.split_key(key)
-        u = jax.random.uniform(k_sel, g.shape, jnp.float32)  # pregenerated
-        out_dtype = (None if codec.integer_coded
-                     else codec.wire_dtype(g.dtype))
-        vals, idx, nnz, lam = ops.gspar_sparse(
-            g.reshape(-1), u.reshape(-1), k_cap=k_cap, rho=cfg.rho,
-            num_iters=cfg.num_iters, interpret=self.interpret,
-            out_dtype=out_dtype)
-        vals, scale = self._encode_compact(codec, k_cod, vals)
-        return self._account(cfg, codec, g, vals, scale, idx, nnz, lam)
+        er, layout, s = self._emit(cfg, scheme, key, g, k_cap, ef=False)
+        return self._finish(scheme, g, er, layout, s)
 
     def compress_sparse_ef(self, cfg, key, g, k_cap):
-        if not self._is_fused(cfg):
+        scheme = self._fused_scheme(cfg)
+        if scheme is None:
             return self._fallback.compress_sparse_ef(cfg, key, g, k_cap)
-        from repro.kernels.sparsify import ops
-        scheme = cfg.scheme()
         codec = scheme.codec
+        if codec.integer_coded:
+            # integer codecs: the residual must subtract the DECODED wire
+            # values (level * scale / s), a multiply that happens after the
+            # kernel — so take the no-EF buffers and do one scatter-subtract
+            # into the target, bit-identical to the reference backend,
+            # rather than folding two roundings that don't cancel.
+            er, layout, s = self._emit(cfg, scheme, key, g, k_cap, ef=False)
+            sg = self._finish(scheme, g, er, layout, s)
+            return sg, _residual_from_buffers(g, sg)
+        # float codecs: the kernel emits the residual g - Q(g) in the same
+        # output pass (one extra HBM write, no extra read); the encoded
+        # value is what gets subtracted, so bf16 rounding of kept values is
+        # already charged to the residual.
+        er, layout, s = self._emit(cfg, scheme, key, g, k_cap, ef=True)
+        sg = self._finish(scheme, g, er, layout, s)
+        return sg, er.residual.reshape(g.shape)
+
+    def _emit(self, cfg, scheme, key, g, k_cap, ef: bool):
+        """Run the two-pass emit kernel for one leaf. Returns the kernel's
+        ``EmitResult``, the statically chosen wire layout, and the
+        selector's accounting scalar (lambda for gspar, max|g| for
+        bernoulli, None otherwise)."""
+        from repro.kernels.sparsify import ops
+        sel, codec = scheme.selector, scheme.codec
+        flat = g.reshape(-1)
+        d = flat.shape[0]
+        # the layout is a static property of (k_cap, d, wire width), so it
+        # is decided *before* the kernel: under the RICE layout the kernel
+        # packs the index words itself and wire_layout.pack ships them.
+        layout = _choose_layout(cfg, codec, g.dtype, k_cap, d)
+        rice_r = coding.rice_parameter(k_cap, d) if layout == "rice" else -1
         k_sel, k_cod = scheme.split_key(key)
-        u = jax.random.uniform(k_sel, g.shape, jnp.float32)
-        if codec.integer_coded:
-            # integer codecs encode downstream of the kernel (the scale is
-            # a reduction over the kept values, unknowable mid-pass), so
-            # the residual comes from one scatter-subtract of the DECODED
-            # values into the target — a single exact g - dec per kept
-            # coordinate, bit-identical to the reference backend, rather
-            # than the kernel's (g - v) plus a (v - dec) fold whose two
-            # roundings don't cancel.
-            vals, idx, nnz, lam = ops.gspar_sparse(
-                g.reshape(-1), u.reshape(-1), k_cap=k_cap, rho=cfg.rho,
-                num_iters=cfg.num_iters, interpret=self.interpret)
-            enc, scale = self._encode_compact(codec, k_cod, vals)
-            dec = codec.decode(enc, scale)
-            res = (g.reshape(-1).at[idx].add(-dec.astype(g.dtype),
-                                             mode="drop").reshape(g.shape))
-            return (self._account(cfg, codec, g, enc, scale, idx, nnz, lam),
-                    res)
-        # float codecs: the fused kernel emits the residual g - Q(g) in the
-        # same pass as Q itself (one extra HBM write, no extra read), and
-        # the kernel's Q output *is* the wire dtype, so the in-pass
-        # subtraction already charges the rounding of kept values to the
-        # residual.
-        vals, idx, nnz, lam, res = ops.gspar_sparse_ef(
-            g.reshape(-1), u.reshape(-1), k_cap=k_cap, rho=cfg.rho,
-            num_iters=cfg.num_iters, interpret=self.interpret,
-            out_dtype=codec.wire_dtype(g.dtype))
-        return (self._account(cfg, codec, g, vals, _ones_scale(), idx, nnz,
-                              lam),
-                res.reshape(g.shape))
+        # codec uniforms at compact rank (k_cap draws, gathered in-kernel)
+        u_cod = (jax.random.uniform(k_cod, (k_cap,), jnp.float32)
+                 if codec.stochastic else None)
+        kw = dict(k_cap=k_cap, codec=codec, rice_r=rice_r, ef=ef,
+                  interpret=self.interpret)
+        if sel.name == "topk":
+            er = ops.topk_emit(flat, u_cod, k_target=sel.k_target(d), **kw)
+            return er, layout, None
+        u = jax.random.uniform(k_sel, g.shape, jnp.float32).reshape(-1)
+        if sel.name == "gspar":
+            if sel.algo == "greedy":
+                er, lam = ops.gspar_emit(flat, u, u_cod, rho=sel.rho,
+                                         num_iters=sel.num_iters, **kw)
+            else:
+                er, lam = ops.closed_emit(flat, u, u_cod, eps=sel.eps, **kw)
+            return er, layout, lam
+        if sel.name == "unisp":
+            return ops.unisp_emit(flat, u, u_cod, rho=sel.rho, **kw), \
+                layout, None
+        er, mx = ops.bern_emit(flat, u, u_cod, **kw)
+        return er, layout, mx
 
-    def _encode_compact(self, codec, k_cod, vals):
-        """Integer-codec encode of the compact value buffer (k_cap work)."""
-        if not codec.integer_coded:
-            return vals, _ones_scale()
-        scale = codec.scale(vals)
-        u = (jax.random.uniform(k_cod, vals.shape, jnp.float32)
-             if codec.stochastic else None)
-        return codec.encode(vals, scale, u), scale
-
-    def _account(self, cfg, codec, g, vals, scale, idx, nnz,
-                 lam) -> SparseGrad:
-        # accounting straight from the compact buffers + one elementwise pass
-        # over |g| (never a dense Q materialization).
-        a = jnp.abs(g.astype(jnp.float32)).reshape(-1)
-        d = a.shape[0]
-        p = jnp.where(a > 0, jnp.minimum(lam * a, 1.0), 0.0)
-        den = jnp.sum(a * a)
-        v32 = codec.decode(vals, scale) if codec.integer_coded \
-            else vals.astype(jnp.float32)
-        var = jnp.where(den > 0, jnp.sum(v32 * v32)
-                        / jnp.where(den > 0, den, 1.0), 0.0)
-        valid = v32 != 0
+    def _finish(self, scheme, g, er, layout, s) -> SparseGrad:
+        """O(k_cap) accounting from the kernel's reductions + compact
+        buffers: the selector's coding-model bits need p only at the kept
+        coordinates (one gather), the variance numerator is a sum over the
+        k_cap decoded values, and the denominator came out of pass 1."""
+        sel, codec = scheme.selector, scheme.codec
+        flat = g.reshape(-1)
+        d = flat.shape[0]
+        v32 = codec.decode(er.values, er.scale) if codec.integer_coded \
+            else er.values.astype(jnp.float32)
+        den = er.den
+        var = jnp.where(den > 0,
+                        jnp.sum(v32 * v32) / jnp.where(den > 0, den, 1.0),
+                        0.0)
         vb = codec.value_bits
+        logd = jnp.log2(jnp.asarray(float(d)))
+        nnz = er.nnz
+        p_sum = er.p_sum
         if codec.integer_coded:
-            # same coding model as the reference path (zeros in the compact
-            # buffer don't count, so passing it as q is exact)
             bits = coding.quantized_coding_bits(v32, d, vb,
                                                 codec.dense_map_bits,
                                                 codec.header_bits)
+        elif sel.name == "topk":
+            # deterministic k_target message — matches the reference
+            # backend's _topk_fast accounting
+            p_sum = jnp.asarray(float(sel.k_target(d)), jnp.float32)
+            bits = jnp.asarray(float(sel.k_target(d)) * (vb + logd) + vb,
+                               jnp.float32)
+        elif sel.name == "unisp":
+            bits = nnz.astype(jnp.float32) * (vb + logd) + vb
         else:
-            logd = jnp.log2(jnp.asarray(float(d)))
-            sure = p[idx] >= 1.0
+            # gspar / bernoulli: sure-vs-sampled split of the kept coords
+            # (coding.realized_coding_bits on the compact buffer)
+            a_idx = jnp.abs(flat[er.idx].astype(jnp.float32))
+            if sel.name == "gspar":
+                p_idx = jnp.minimum(s * a_idx, 1.0)
+            else:
+                p_idx = jnp.where(s > 0,
+                                  a_idx / jnp.where(s > 0, s, 1.0), 0.0)
+            valid = v32 != 0
+            sure = p_idx >= 1.0
             n_a = jnp.sum((valid & sure).astype(jnp.float32))
             n_b = jnp.sum((valid & ~sure).astype(jnp.float32))
             bits = n_a * (vb + logd) + jnp.minimum(2.0 * d, n_b * logd) + vb
-        return SparseGrad(values=vals, idx=idx, nnz=nnz, p_sum=jnp.sum(p),
-                          bits=bits, var_ratio=var, scale=scale, d=d,
-                          shape=tuple(g.shape), codec=codec.name,
-                          layout=_choose_layout(cfg, codec, g.dtype,
-                                                vals.shape[-1], d),
-                          idx_sorted=True)  # counting compaction: the valid
-                                            # prefix ascends by coordinate
+        return SparseGrad(values=er.values, idx=er.idx, nnz=nnz,
+                          p_sum=p_sum, bits=bits, var_ratio=var,
+                          scale=er.scale, d=d, shape=tuple(g.shape),
+                          codec=codec.name, layout=layout,
+                          idx_sorted=True,  # tile-sequential compaction:
+                                            # the valid prefix ascends by
+                                            # coordinate
+                          rice_words=er.rice_words, rice_used=er.rice_used)
 
 
 def resolve_backend(name: str, interpret: bool | None = None) -> Backend:

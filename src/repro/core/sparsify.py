@@ -22,17 +22,20 @@ def _safe_div(num, den):
     return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
 
 
-def closed_form_probabilities(g: jax.Array, eps: float | jax.Array) -> jax.Array:
-    """Algorithm 2: optimal p for variance budget (1+eps)*sum(g^2).
+def closed_form_lambda(g: jax.Array,
+                       eps: float | jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Algorithm 2's scalar: (lambda, any_ok) for variance budget
+    (1+eps)*sum(g^2).
 
     Finds the smallest k with
         |g_(k+1)| * sum_{i>k} |g_(i)|  <=  eps * sum g^2 + sum_{i>k} g_(i)^2
-    then p_i = min(lambda * |g_i|, 1) with
-        lambda = sum_{i>k}|g_(i)| / (eps * sum g^2 + sum_{i>k} g_(i)^2).
-    """
-    g = jnp.asarray(g)
-    shape = g.shape
-    a = jnp.abs(g.reshape(-1)).astype(jnp.float32)
+    and returns lambda = sum_{i>k}|g_(i)| / (eps * sum g^2 + sum_{i>k}
+    g_(i)^2). ``any_ok`` is the feasibility bit (for eps >= 0 it is always
+    true — cond holds at k = d-1 — but callers that branch on it stay
+    bitwise-faithful to the published algorithm). Shared by the reference
+    probability solver and the fused pallas path, so both derive the
+    identical scalar from the identical sort."""
+    a = jnp.abs(jnp.asarray(g).reshape(-1)).astype(jnp.float32)
     d = a.shape[0]
     a_sorted = jnp.sort(a)[::-1]                     # descending magnitudes
     g2_total = jnp.sum(a_sorted * a_sorted)
@@ -49,6 +52,18 @@ def closed_form_probabilities(g: jax.Array, eps: float | jax.Array) -> jax.Array
     k = jnp.where(any_ok, jnp.argmax(cond), d)       # smallest satisfying k
     k_safe = jnp.minimum(k, d - 1)
     lam = jnp.where(any_ok, _safe_div(tail_l1[k_safe], budget[k_safe]), 0.0)
+    return lam, any_ok
+
+
+def closed_form_probabilities(g: jax.Array, eps: float | jax.Array) -> jax.Array:
+    """Algorithm 2: optimal p for variance budget (1+eps)*sum(g^2).
+
+    p_i = min(lambda * |g_i|, 1) with lambda from ``closed_form_lambda``.
+    """
+    g = jnp.asarray(g)
+    shape = g.shape
+    a = jnp.abs(g.reshape(-1)).astype(jnp.float32)
+    lam, any_ok = closed_form_lambda(a, eps)
 
     p = jnp.minimum(lam * a, 1.0)
     # k == d (or zero tail): keep everything that is nonzero surely

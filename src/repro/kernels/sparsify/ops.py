@@ -2,21 +2,34 @@
 -shaped gradient leaf into the kernel's [R, C] block layout, run, unpad.
 
 The end-to-end op ``gspar_sparsify`` performs Algorithm 3 (greedy) entirely
-fused: one stats pass (kernel 2), ``num_iters`` saturation-aware tail-stats
-passes driving the scalar rescale loop (kernel 3; skipped work when nothing
-saturates, since the rescale factor is exactly 1 then), and one
-threshold-sample-scale pass (kernel 1). ``gspar_sparse`` additionally emits
-the compact ``(values, idx)`` wire buffers directly — the selection is a
-single O(d) counting pass (``jnp.nonzero`` with a static size), never a sort.
+fused: one stats pass, ``num_iters`` saturation-aware tail-stats passes
+driving the scalar rescale loop (skipped work when nothing saturates, since
+the rescale factor is exactly 1 then), and one threshold-sample-scale pass.
+
+The ``*_emit`` family is the two-pass compaction pipeline: the kernels'
+only large output is the wire buffer itself. Pass 1 (``select_stats_2d``)
+runs the selector and reduces survivor counts, p/variance accounting, and
+the codec-scale statistics in one traversal; pass 2 (``compact_emit_2d``)
+re-derives the kept mask and writes the compact ``(values, idx)`` buffers
+directly — values already codec-encoded (qsgd/ternary integer levels and
+bf16 emitted from the kernel exactly like f32), the optional EF residual
+in the same pass, and the Golomb-Rice index stream bit-packed on the way
+out (no post-kernel ``rice_encode``). One emit wrapper per selector:
+``gspar_emit`` (Algorithm 3), ``closed_emit`` (Algorithm 2's lambda via
+one XLA sort, then the same fused sample+write), ``unisp_emit``,
+``bern_emit``, ``topk_emit``. The legacy ``gspar_sparse(_ef)`` wrappers
+now route through the same pipeline.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import codecs as codecs_lib
+from repro.core import sparsify as sparsify_lib
 from repro.kernels.sparsify import kernel as K
 
 
@@ -100,7 +113,7 @@ def gspar_lambda(g: jax.Array, rho: float = 0.1, num_iters: int = 2,
                  interpret: bool = False) -> jax.Array:
     """Saturation-aware greedy lambda for a leaf, via the fused stats path."""
     g2d, n, _, _ = _pad_2d(g.reshape(-1))
-    l1, _, mx = K.stats_2d(g2d, interpret=interpret)
+    l1, mx = K.stats_l1max_2d(g2d, interpret=interpret)
     return greedy_lambda(l1, mx, rho, n, num_iters,
                          tail_fn=_kernel_tail_fn(g2d, n, interpret))
 
@@ -111,13 +124,147 @@ def gspar_sparsify(g: jax.Array, u: jax.Array, rho: float = 0.1,
     """End-to-end fused Q(g) with pregenerated uniforms u (paper 5.3 trick)."""
     shape = g.shape
     flat = g.reshape(-1)
-    g2d, n, rows, c = _pad_2d(flat)
+    g2d, n, _, _ = _pad_2d(flat)
     u2d, _, _, _ = _pad_2d(u.reshape(-1).astype(jnp.float32))
-    l1, l2, mx = K.stats_2d(g2d, interpret=interpret)
+    l1, mx = K.stats_l1max_2d(g2d, interpret=interpret)
     lam = greedy_lambda(l1, mx, rho, n, num_iters,
                         tail_fn=_kernel_tail_fn(g2d, n, interpret))
     out = K.sparsify_2d(g2d, u2d, lam, interpret=interpret)
     return out.reshape(-1)[:n].reshape(shape)
+
+
+class EmitResult(NamedTuple):
+    """Wire buffers and accounting scalars from the two-pass pipeline.
+
+    ``values``/``idx`` are the compact buffers (values codec-encoded in the
+    wire dtype, idx the ascending-coordinate valid prefix, padding slots
+    idx 0 / value exactly 0). ``nnz`` counts survivors (pre-cap),
+    ``nonzeros`` the support |{i : g_i != 0}|, ``p_sum``/``den`` the
+    accounting reductions (sum p, sum g^2) that previously cost the
+    backend an extra O(d) pass. ``rice_words``/``rice_used`` carry the
+    pre-packed Golomb-Rice index stream when requested (else None);
+    ``residual`` the in-pass EF residual (else None)."""
+    values: jax.Array
+    idx: jax.Array
+    nnz: jax.Array
+    nonzeros: jax.Array
+    p_sum: jax.Array
+    den: jax.Array
+    scale: jax.Array
+    rice_words: jax.Array | None
+    rice_used: jax.Array | None
+    residual: jax.Array | None
+
+
+_F32 = codecs_lib.FloatCodec()
+
+
+def _two_pass(flat: jax.Array, u: jax.Array | None, s1, s2, *, pkind: str,
+              codec, k_cap: int, rice_r: int, ef: bool,
+              u_cod: jax.Array | None, interpret: bool) -> EmitResult:
+    """Shared two-pass driver: pass 1 select+reduce, scale finalize, pass 2
+    compact write. ``u`` is the selector's pregenerated uniforms (ignored
+    for deterministic selectors), ``u_cod`` the codec's (length k_cap,
+    gathered per compact rank inside the kernel)."""
+    g2d, n, _, _ = _pad_2d(flat)
+    if u is not None:
+        u2d, _, _, _ = _pad_2d(u.reshape(-1).astype(jnp.float32))
+    else:
+        u2d = g2d                               # unused by the kernel body
+    cnt, nzc, psum, den, vsq, vmx = K.select_stats_2d(
+        g2d, u2d, s1, s2, k_cap=k_cap, pkind=pkind, interpret=interpret)
+    scale = codecs_lib.finalize_scale(codec, vsq, vmx)
+    uc = u_cod if u_cod is not None else jnp.zeros((1,), jnp.float32)
+    vals, idx, words, used, res = K.compact_emit_2d(
+        g2d, u2d, s1, s2, scale, uc, pkind=pkind, codec=codec,
+        out_dtype=codec.wire_dtype(flat.dtype), k_cap=k_cap, d=n,
+        rice_r=rice_r, ef=ef, interpret=interpret)
+    if ef:
+        res = res.reshape(-1)[:n]
+    return EmitResult(vals, idx, cnt, nzc, psum, den, scale,
+                      words, used, res)
+
+
+_EMIT_STATICS = ("k_cap", "codec", "rice_r", "ef", "interpret")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=_EMIT_STATICS + ("rho", "num_iters"))
+def gspar_emit(g: jax.Array, u: jax.Array, u_cod: jax.Array | None = None, *,
+               k_cap: int, rho: float = 0.1, num_iters: int = 2,
+               codec=_F32, rice_r: int = -1, ef: bool = False,
+               interpret: bool = False):
+    """Algorithm 3 (greedy lambda), fully fused: stats -> scalar lambda ->
+    two-pass compact emit. Returns ``(EmitResult, lam)``."""
+    flat = g.reshape(-1)
+    g2d, n, _, _ = _pad_2d(flat)
+    l1, mx = K.stats_l1max_2d(g2d, interpret=interpret)
+    lam = greedy_lambda(l1, mx, rho, n, num_iters,
+                        tail_fn=_kernel_tail_fn(g2d, n, interpret))
+    er = _two_pass(flat, u, lam, jnp.float32(0), pkind="lam", codec=codec,
+                   k_cap=k_cap, rice_r=rice_r, ef=ef, u_cod=u_cod,
+                   interpret=interpret)
+    return er, lam
+
+
+@functools.partial(jax.jit, static_argnames=_EMIT_STATICS + ("eps",))
+def closed_emit(g: jax.Array, u: jax.Array, u_cod: jax.Array | None = None, *,
+                k_cap: int, eps: float = 0.1, codec=_F32, rice_r: int = -1,
+                ef: bool = False, interpret: bool = False):
+    """Algorithm 2 (closed-form lambda: one XLA sort for the scalar, shared
+    with the reference solver bit-for-bit), then the same fused sample +
+    compact write as the greedy path. Returns ``(EmitResult, lam)``."""
+    flat = g.reshape(-1)
+    lam, _any_ok = sparsify_lib.closed_form_lambda(flat, eps)
+    er = _two_pass(flat, u, lam, jnp.float32(0), pkind="lam", codec=codec,
+                   k_cap=k_cap, rice_r=rice_r, ef=ef, u_cod=u_cod,
+                   interpret=interpret)
+    return er, lam
+
+
+@functools.partial(jax.jit, static_argnames=_EMIT_STATICS + ("rho",))
+def unisp_emit(g: jax.Array, u: jax.Array, u_cod: jax.Array | None = None, *,
+               k_cap: int, rho: float = 0.1, codec=_F32, rice_r: int = -1,
+               ef: bool = False, interpret: bool = False):
+    """UniSp baseline: p = rho on the support. Returns an ``EmitResult``."""
+    return _two_pass(g.reshape(-1), u, jnp.float32(rho), jnp.float32(0),
+                     pkind="rho", codec=codec, k_cap=k_cap, rice_r=rice_r,
+                     ef=ef, u_cod=u_cod, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=_EMIT_STATICS)
+def bern_emit(g: jax.Array, u: jax.Array, u_cod: jax.Array | None = None, *,
+              k_cap: int, codec=_F32, rice_r: int = -1, ef: bool = False,
+              interpret: bool = False):
+    """Bernoulli selector (TernGrad's): p = |g| / max|g|. Returns
+    ``(EmitResult, max_abs)``."""
+    flat = g.reshape(-1)
+    g2d, _, _, _ = _pad_2d(flat)
+    _, mx = K.stats_l1max_2d(g2d, interpret=interpret)
+    er = _two_pass(flat, u, jnp.float32(0), mx, pkind="bern", codec=codec,
+                   k_cap=k_cap, rice_r=rice_r, ef=ef, u_cod=u_cod,
+                   interpret=interpret)
+    return er, mx
+
+
+@functools.partial(jax.jit, static_argnames=_EMIT_STATICS + ("k_target",))
+def topk_emit(g: jax.Array, u_cod: jax.Array | None = None, *, k_cap: int,
+              k_target: int, codec=_F32, rice_r: int = -1, ef: bool = False,
+              interpret: bool = False):
+    """Deterministic top-k: one XLA ``top_k`` derives the magnitude
+    threshold and the at-threshold tie budget; the kernel then keeps
+    |g| > t plus the first ``budget`` coordinates with |g| == t, which is
+    exactly XLA top_k's lowest-index-first tie break — so the kept set
+    matches the reference selector while the compact write stays a
+    counting pass. Returns an ``EmitResult``."""
+    flat = g.reshape(-1)
+    a = jnp.abs(flat.astype(jnp.float32))
+    topv = jax.lax.top_k(a, k_target)[0]
+    t = topv[-1]
+    budget = jnp.float32(k_target) - jnp.sum((topv > t).astype(jnp.float32))
+    return _two_pass(flat, None, t, budget, pkind="topk", codec=codec,
+                     k_cap=k_cap, rice_r=rice_r, ef=ef, u_cod=u_cod,
+                     interpret=interpret)
 
 
 @functools.partial(jax.jit,
@@ -129,43 +276,39 @@ def gspar_sparse(g: jax.Array, u: jax.Array, k_cap: int, rho: float = 0.1,
     """Fused stats -> lambda -> sample -> compact: emits the wire buffers
     ``(values[k_cap], idx[k_cap], nnz, lam)`` directly.
 
-    The compact stage is a single counting selection (first k_cap nonzeros in
-    coordinate order) — sort-free, unlike magnitude-ranked ``top_k``
-    compaction. Bernoulli survivors are exchangeable, so dropping by position
-    on (rare) overflow is as unbiased as dropping by magnitude is biased;
-    overflow itself stays ~impossible at the configured capacity slack.
-    Padding slots carry idx 0 with value exactly 0, so scatter-add
-    reconstruction is unaffected.
+    Compatibility wrapper over ``gspar_emit``: the compaction is the
+    two-pass counting write (first k_cap survivors in coordinate order) —
+    sort-free, unlike magnitude-ranked ``top_k`` compaction. Bernoulli
+    survivors are exchangeable, so dropping by position on (rare) overflow
+    is as unbiased as dropping by magnitude is biased; overflow itself
+    stays ~impossible at the configured capacity slack. Padding slots
+    carry idx 0 with value exactly 0, so scatter-add reconstruction is
+    unaffected.
 
     The ascending-coordinate order of the valid prefix is a load-bearing
     contract (``SparseGrad.idx_sorted``): the BITMAP wire layout packs
     these buffers without an argsort (``compaction.bitmap_pack(nnz=...)``),
     keeping the fused path's wire prep O(k_cap).
 
-    ``out_dtype`` (static) is the value codec's wire dtype: the fused
-    sample pass quantizes kept values on its way out of VMEM, so e.g. the
-    bf16 codec costs no extra traversal.
+    ``out_dtype`` (static) selects the float wire dtype: the compact write
+    quantizes kept values on its way out of VMEM, so e.g. the bf16 codec
+    costs no extra traversal.
     """
-    g2d, n, _, _ = _pad_2d(g.reshape(-1))
-    u2d, _, _, _ = _pad_2d(u.reshape(-1).astype(jnp.float32))
-    l1, _, mx = K.stats_2d(g2d, interpret=interpret)
-    lam = greedy_lambda(l1, mx, rho, n, num_iters,
-                        tail_fn=_kernel_tail_fn(g2d, n, interpret))
-    flat = K.sparsify_2d(g2d, u2d, lam, interpret=interpret,
-                         out_dtype=out_dtype).reshape(-1)[:n]
-    vals, idx, nnz = _counting_compact(flat, k_cap)
-    return vals, idx, nnz, lam
+    codec = _codec_for(out_dtype)
+    er, lam = gspar_emit(g, u, None, k_cap=k_cap, rho=rho,
+                         num_iters=num_iters, codec=codec,
+                         interpret=interpret)
+    return er.values, er.idx, er.nnz, lam
 
 
-def _counting_compact(flat: jax.Array, k_cap: int):
-    """Sort-free compaction: first k_cap nonzeros in coordinate order."""
-    nz = flat != 0
-    nnz = jnp.sum(nz.astype(jnp.int32))
-    (idx,) = jnp.nonzero(nz, size=k_cap, fill_value=0)
-    idx = idx.astype(jnp.int32)
-    valid = jnp.arange(k_cap, dtype=jnp.int32) < jnp.minimum(nnz, k_cap)
-    vals = jnp.where(valid, flat[idx], jnp.zeros((), flat.dtype))
-    return vals, idx, nnz
+def _codec_for(out_dtype):
+    if out_dtype is None:
+        return _F32
+    if jnp.dtype(out_dtype) == jnp.bfloat16:
+        return codecs_lib.FloatCodec(bits=16, rounding=True)
+    raise NotImplementedError(
+        f"gspar_sparse out_dtype {out_dtype!r}: only None (leaf dtype) and "
+        "bfloat16 ride the compat wrapper; use gspar_emit with a codec")
 
 
 @functools.partial(jax.jit,
@@ -174,29 +317,24 @@ def _counting_compact(flat: jax.Array, k_cap: int):
 def gspar_sparse_ef(g: jax.Array, u: jax.Array, k_cap: int, rho: float = 0.1,
                     num_iters: int = 2, interpret: bool = False,
                     out_dtype=None):
-    """Error-feedback twin of ``gspar_sparse``: the fused kernel subtracts
-    the kept (amplified, wire-dtype-rounded) values from the target in the
-    same pass that samples them, emitting ``(values[k_cap], idx[k_cap],
-    nnz, lam, residual[d])`` with ``residual = g - Q(g)`` in g's dtype and
-    values in ``out_dtype`` (the codec's wire dtype; the in-pass
-    subtraction therefore charges the wire rounding of kept values to the
-    residual with no post-hoc fold). On overflow (nnz > k_cap) the dropped
-    survivors remain *subtracted* from the residual — they were sampled,
-    just not transmitted — matching the dense-wire semantics of ``target -
-    Q(target)``; the reference sparse backend instead re-carries their
-    error (residual = target - transmitted). The two agree exactly at zero
-    overflow, which the ``capacity_for`` sizing guarantees in configured
-    operation."""
-    g2d, n, _, _ = _pad_2d(g.reshape(-1))
-    u2d, _, _, _ = _pad_2d(u.reshape(-1).astype(jnp.float32))
-    l1, _, mx = K.stats_2d(g2d, interpret=interpret)
-    lam = greedy_lambda(l1, mx, rho, n, num_iters,
-                        tail_fn=_kernel_tail_fn(g2d, n, interpret))
-    q2d, res2d = K.sparsify_ef_2d(g2d, u2d, lam, interpret=interpret,
-                                  out_dtype=out_dtype)
-    flat = q2d.reshape(-1)[:n]
-    vals, idx, nnz = _counting_compact(flat, k_cap)
-    return vals, idx, nnz, lam, res2d.reshape(-1)[:n]
+    """Error-feedback twin of ``gspar_sparse``: the compact-write kernel
+    subtracts the kept (amplified, wire-dtype-rounded) values from the
+    target in the same pass that samples them, emitting ``(values[k_cap],
+    idx[k_cap], nnz, lam, residual[d])`` with ``residual = g - Q(g)`` in
+    g's dtype and values in ``out_dtype`` (the codec's wire dtype; the
+    in-pass subtraction therefore charges the wire rounding of kept values
+    to the residual with no post-hoc fold). On overflow (nnz > k_cap) the
+    dropped survivors remain *subtracted* from the residual — they were
+    sampled, just not transmitted — matching the dense-wire semantics of
+    ``target - Q(target)``; the reference sparse backend instead
+    re-carries their error (residual = target - transmitted). The two
+    agree exactly at zero overflow, which the ``capacity_for`` sizing
+    guarantees in configured operation."""
+    codec = _codec_for(out_dtype)
+    er, lam = gspar_emit(g, u, None, k_cap=k_cap, rho=rho,
+                         num_iters=num_iters, codec=codec, ef=True,
+                         interpret=interpret)
+    return er.values, er.idx, er.nnz, lam, er.residual
 
 
 @functools.partial(jax.jit, static_argnames=("rho", "num_iters", "interpret"))
@@ -213,8 +351,8 @@ def gspar_sparsify_prng(g: jax.Array, seed: jax.Array, rho: float = 0.1,
     from jax.experimental.pallas import tpu as pltpu
     shape = g.shape
     flat = g.reshape(-1)
-    g2d, n, rows, c = _pad_2d(flat)
-    l1, l2, mx = K.stats_2d(g2d, interpret=interpret)
+    g2d, n, _, _ = _pad_2d(flat)
+    l1, mx = K.stats_l1max_2d(g2d, interpret=interpret)
     lam = greedy_lambda(l1, mx, rho, n, num_iters,
                         tail_fn=_kernel_tail_fn(g2d, n, interpret))
     if interpret and not hasattr(pltpu, "InterpretParams"):

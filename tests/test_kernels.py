@@ -224,6 +224,176 @@ class TestSparsifyEFKernel:
                                    rtol=1e-6, atol=1e-6)
 
 
+class TestEmitCodecFusion:
+    """Pass 2 of the two-pass pipeline fuses ``codec.encode`` into the
+    compact write. The emitted wire buffer must be bit-identical to
+    encoding the f32 compact buffer with the kernel's own scale — the
+    contract that lets the backend skip any post-kernel encode pass."""
+
+    CODEC_NAMES = ["qsgd2", "qsgd4", "qsgd8", "ternary", "bf16", "f32"]
+
+    def _emit_pair(self, name, n=70_000, k_cap=6144, rho=0.05):
+        from repro.core import codecs as codecs_lib
+        g = _grad(30, (n,), jnp.float32)
+        u = jax.random.uniform(jax.random.key(31), (n,), jnp.float32)
+        codec = codecs_lib.get(name)
+        u_cod = (jax.random.uniform(jax.random.key(32), (k_cap,),
+                                    jnp.float32)
+                 if codec.stochastic else None)
+        base, _ = ops.gspar_emit(g, u, k_cap=k_cap, rho=rho, interpret=True)
+        er, _ = ops.gspar_emit(g, u, u_cod, k_cap=k_cap, rho=rho,
+                               codec=codec, interpret=True)
+        return codec, u_cod, base, er
+
+    @pytest.mark.parametrize("name", CODEC_NAMES)
+    def test_kernel_encode_bit_identical_to_reference(self, name):
+        codec, u_cod, base, er = self._emit_pair(name)
+        assert er.values.dtype == codec.wire_dtype(jnp.float32)
+        # same selection (codec never changes the kept set)
+        np.testing.assert_array_equal(np.asarray(er.idx),
+                                      np.asarray(base.idx))
+        assert int(er.nnz) == int(base.nnz)
+        # in-kernel encode == reference encode of the f32 compact buffer
+        # under the kernel's scale (uniforms aligned per compact rank)
+        expect = codec.encode(base.values, er.scale, u_cod)
+        np.testing.assert_array_equal(np.asarray(er.values),
+                                      np.asarray(expect))
+
+    @pytest.mark.parametrize("name", ["qsgd8", "ternary"])
+    def test_streaming_scale_matches_compact_reduction(self, name):
+        codec, _, base, er = self._emit_pair(name)
+        # pass 1's tile-order statistic vs one reduction over the compact
+        # buffer: same value up to summation order
+        np.testing.assert_allclose(float(er.scale),
+                                   float(codec.scale(base.values)),
+                                   rtol=1e-4)
+
+    @pytest.mark.parametrize("name", CODEC_NAMES)
+    def test_padding_slots_stay_exact_zero(self, name):
+        """encode(0) == 0 for every codec: capacity padding never leaks
+        nonzero levels onto the wire."""
+        codec, _, _, er = self._emit_pair(name, rho=0.01, k_cap=8192)
+        nnz = int(er.nnz)
+        assert nnz < 8192                       # real padding present
+        tail = np.asarray(er.values, np.float32)[nnz:]
+        np.testing.assert_array_equal(tail, np.zeros_like(tail))
+
+    def test_overflow_drops_but_reports_precap_nnz(self):
+        """k_cap overflow: the buffer keeps the first k_cap survivors in
+        ascending coordinate order; nnz still counts every survivor so
+        SparseGrad.overflow() can report the drop."""
+        _, _, _, er = self._emit_pair("f32", k_cap=256, rho=0.05)
+        assert int(er.nnz) > 256
+        idx = np.asarray(er.idx)
+        assert (np.diff(idx) > 0).all()         # strict ascending, full
+        vals = np.asarray(er.values, np.float32)
+        assert (vals != 0).all()
+
+    @pytest.mark.parametrize("name", ["bf16", "f32"])
+    def test_ef_residual_subtracts_wire_values(self, name):
+        """Float-codec EF in-pass residual: exactly g minus the scatter of
+        the *encoded* values — bf16 rounding of kept values is charged to
+        the residual, bit for bit."""
+        from repro.comm import compaction
+        from repro.core import codecs as codecs_lib
+        n, k_cap = 70_000, 8192
+        g = _grad(33, (n,), jnp.float32)
+        u = jax.random.uniform(jax.random.key(34), (n,), jnp.float32)
+        codec = codecs_lib.get(name)
+        er, _ = ops.gspar_emit(g, u, k_cap=k_cap, rho=0.05, codec=codec,
+                               ef=True, interpret=True)
+        assert int(er.nnz) <= k_cap
+        sent = compaction.scatter(er.values.astype(jnp.float32), er.idx, n)
+        np.testing.assert_array_equal(
+            np.asarray(er.residual),
+            np.asarray(g, np.float32) - np.asarray(sent))
+
+
+class TestEmitRicePacking:
+    """Pass 2's fused Golomb-Rice index packing must be bit-identical to
+    the send-side ``compaction.rice_encode`` it retires."""
+
+    def _check(self, g, k_cap, rho, r):
+        from repro.comm import compaction
+        n = g.shape[0]
+        u = jax.random.uniform(jax.random.key(41), (n,), jnp.float32)
+        er, _ = ops.gspar_emit(g, u, k_cap=k_cap, rho=rho, rice_r=r,
+                               interpret=True)
+        sv, words, used = compaction.rice_encode(er.values, er.idx, n, r,
+                                                 nnz=er.nnz)
+        np.testing.assert_array_equal(np.asarray(er.rice_words),
+                                      np.asarray(words))
+        assert int(er.rice_used) == int(used)
+        # idx_sorted producer: coordinate-ordered values are the buffer
+        np.testing.assert_array_equal(np.asarray(sv, np.float32),
+                                      np.asarray(er.values, np.float32))
+
+    def test_words_bit_identical_to_rice_encode(self):
+        from repro.core import coding
+        n, k_cap = 70_000, 2048
+        self._check(_grad(40, (n,), jnp.float32), k_cap, 0.02,
+                    coding.rice_parameter(k_cap, n))
+
+    def test_r_zero_edge(self):
+        # r = 0: pure unary gaps, no remainder field
+        self._check(_grad(42, (70_000,), jnp.float32), 2048, 0.02, 0)
+
+    def test_empty_stream(self):
+        # zero gradient: no survivors, used = header-only word count
+        self._check(jnp.zeros((70_000,), jnp.float32), 2048, 0.02, 4)
+
+
+class TestEmitSelectors:
+    """Selector coverage of the two-pass kernel beyond gspar: the kept set
+    and amplified values must equal the dense reference selector math."""
+
+    N = 70_000
+
+    def test_unisp_matches_uniform_reference(self):
+        rho = 0.05
+        g = _grad(50, (self.N,), jnp.float32)
+        u = jax.random.uniform(jax.random.key(51), (self.N,), jnp.float32)
+        er = ops.unisp_emit(g, u, k_cap=8192, rho=rho, interpret=True)
+        gn, un = np.asarray(g), np.asarray(u)
+        p = np.where(np.abs(gn) > 0, np.float32(rho), np.float32(0))
+        keep = un < p
+        idx = np.flatnonzero(keep)
+        assert int(er.nnz) == idx.size
+        np.testing.assert_array_equal(np.asarray(er.idx)[:idx.size], idx)
+        np.testing.assert_array_equal(
+            np.asarray(er.values, np.float32)[:idx.size],
+            (gn[idx].astype(np.float32) / rho).astype(np.float32))
+
+    def test_bern_matches_terngrad_reference(self):
+        g = _grad(52, (self.N,), jnp.float32)
+        u = jax.random.uniform(jax.random.key(53), (self.N,), jnp.float32)
+        er, mx = ops.bern_emit(g, u, k_cap=self.N, interpret=True)
+        gn, un = np.asarray(g, np.float32), np.asarray(u)
+        a = np.abs(gn)
+        np.testing.assert_allclose(float(mx), a.max(), rtol=1e-6)
+        p = a / float(mx)
+        keep = un < np.minimum(p, 1.0)
+        idx = np.flatnonzero(keep)
+        assert int(er.nnz) == idx.size
+        np.testing.assert_array_equal(np.asarray(er.idx)[:idx.size], idx)
+
+    def test_topk_matches_xla_top_k_with_ties(self):
+        # heavy ties at the threshold: round magnitudes to one decimal
+        rng = np.random.default_rng(54)
+        g = jnp.asarray(np.round(rng.standard_normal(self.N), 1),
+                        jnp.float32)
+        k = 500
+        er = ops.topk_emit(g, k_cap=1024, k_target=k, interpret=True)
+        _, ref_idx = jax.lax.top_k(jnp.abs(g).astype(jnp.float32), k)
+        expect = np.sort(np.asarray(ref_idx))
+        nnz = int(er.nnz)
+        assert nnz == k
+        np.testing.assert_array_equal(np.asarray(er.idx)[:nnz], expect)
+        np.testing.assert_array_equal(
+            np.asarray(er.values, np.float32)[:nnz],
+            np.asarray(g, np.float32)[expect])
+
+
 class TestPRNGVariant:
     def test_deterministic_and_statistically_unbiased(self):
         g = _grad(9, (65536,), jnp.float32)
