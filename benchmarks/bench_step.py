@@ -27,6 +27,14 @@ that the COMMITTED baseline's gated rows show overlap strictly beating
 sync. ``--strict`` asserts that invariant on the fresh run itself — use
 it when regenerating the baseline, so a jitter-poisoned run is refused
 instead of committed; CI stays band-only because runner timing is noisy.
+
+Two non-timing rows ride along: ``dispatch:tree`` records the
+shape-bucketed grouping plan (leaves vs shape groups vs compress
+dispatches) and is gated exactly — it is a static property of tree +
+config, so any drift means per-leaf dispatch returned. ``breakdown:*``
+rows attribute each sync row's wall clock to compress/pack/apply/
+collective and are band-gated per stage (with an absolute floor so tiny
+residual stages don't flap).
 """
 from __future__ import annotations
 
@@ -41,6 +49,14 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # (wire, wire_layout, gated): gated rows are the acceptance pair — the
 # committed baseline must show overlap < sync on them (check_bench
 # enforces it on the baseline; --strict enforces it on a fresh run).
+#
+# The RICE row stays informational even after shape bucketing collapsed
+# the per-leaf dispatch: its two-phase exchange (a phase-one length
+# gather must complete before the payload gather can be sized) inserts a
+# host sync between the phases, so overlap-vs-sync on a single-host mesh
+# is dominated by that barrier, not by the staging the overlapped
+# exchange restructures — the delta hovers inside timer jitter and would
+# flap a strict gate.
 ROWS = (
     ("gather", "auto", True),
     ("packed", "auto", True),
@@ -98,7 +114,7 @@ def _stage_breakdown(cfg, args, stacked, iters: int) -> dict:
     @jax.jit
     def compress(k, g):
         items, _, _, _ = compress_tree_sparse(cfg, k, g, stacked=stacked)
-        return [sg for kind, sg in items if kind == "sparse"]
+        return [sg for kind, sg, _ in items if kind == "sparse"]
 
     sgs = compress(key, grads)
     jax.block_until_ready(sgs[0].values)
@@ -116,7 +132,11 @@ def _stage_breakdown(cfg, args, stacked, iters: int) -> dict:
         dense = []
         for sg, lp, (v, w, n) in zip(sgs, plans, packed):
             codec = codecs_lib.get(sg.codec)
-            decoded = codec.decode(v, sg.scale).reshape(1, -1)
+            if codec.has_scale and sg.values.ndim == 2:
+                decoded = jax.vmap(codec.decode)(v, sg.scale)
+            else:
+                decoded = codec.decode(v, sg.scale)
+            decoded = decoded.reshape(1, -1)   # m=1 worker, rows folded in
             wcounts = n.reshape(1, -1) if lp.layout == "rice" else None
             upd, coords = wire_layout.unpack_gathered(
                 lp, decoded, None if lp.layout == "dense" else w.reshape(1, -1),
@@ -169,6 +189,25 @@ def run(quick: bool = False, return_payload: bool = False,
     grads, stacked = _model_tree(quick)
     dense_bytes = sum(x.size * x.dtype.itemsize
                       for x in jax.tree.leaves(grads))
+
+    # dispatch accounting: the shape-bucketed grouping plan is static (a
+    # trace-time property of the tree + config, not a timing), so this row
+    # is gated EXACTLY by check_bench — a regression here means per-leaf
+    # dispatch crept back into the compress path.
+    from repro.core.grouping import plan_tree
+    plan_cfg = CompressionConfig(name="gspar", rho=0.01, wire="gather",
+                                 min_leaf_size=256, backend="reference")
+    tree_plan = plan_tree(plan_cfg, jax.tree.leaves(grads),
+                          jax.tree.leaves(stacked))
+    payload["dispatch:tree"] = {
+        "leaves": float(tree_plan.n_leaves),
+        "shape_groups": float(len(tree_plan.groups)),
+        "compress_dispatches": float(tree_plan.dispatch_count),
+    }
+    rows.append(("dispatch:tree", float(tree_plan.dispatch_count),
+                 f"leaves={tree_plan.n_leaves};"
+                 f"shape_groups={len(tree_plan.groups)};"
+                 f"compress_dispatches={tree_plan.dispatch_count}"))
     mesh = jax.make_mesh((1,), ("data",))
     iters = 30 if quick else 40
     args = (jax.random.key(7), grads)

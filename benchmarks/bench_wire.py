@@ -70,7 +70,7 @@ def _wire_v3_accounting(items):
     layout_bytes = 0.0
     entropy_bytes = 0.0
     layouts: dict = {}
-    for kind, p in items:
+    for kind, p, _ in items:
         if kind == "dense":                   # tiny leaves: f32 psum
             layout_bytes += p.size * 4
             entropy_bytes += p.size * 4
@@ -268,7 +268,7 @@ def run(quick: bool = False, return_payload: bool = False):
             min(coding_lib.realized_wire_bits(lay, p.k_cap, p.d,
                                               p.values.dtype.itemsize * 8)
                 for lay in ("coo", "bitmap", "dense")) / 8
-            for kind, p in items)
+            for kind, p, _ in items)
         assert rec["wire_bytes"] < pre_v3, (key_, rec["wire_bytes"], pre_v3)
         rec["pre_v3_bytes"] = pre_v3
 
@@ -279,7 +279,7 @@ def run(quick: bool = False, return_payload: bool = False):
                                 min_leaf_size=256, backend="reference")
     items, _, _, _ = compress_tree_sparse(cal_cfg, jax.random.key(11), grads,
                                           stacked=stacked)
-    sparse = [sg for kind, sg in items if kind == "sparse"]
+    sparse = [sg for kind, sg, _ in items if kind == "sparse"]
     total_d = sum(sg.d * max(1, sg.p_sum.size) for sg in sparse)
     exp_nnz = sum(float(jnp.sum(sg.p_sum)) for sg in sparse)
     real_nnz = sum(float(jnp.sum(sg.nnz)) for sg in sparse)

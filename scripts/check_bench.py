@@ -11,14 +11,19 @@ regression — exactly what the wire-format-v2 work exists to prevent
 silently re-happening.
 
 ``--gate step`` compares a freshly generated ``BENCH_step.json`` and gates
-``us_per_step`` per row with a deliberately wide band (STEP_TOLERANCE —
+the timing metrics per row with a deliberately wide band (STEP_TOLERANCE —
 CI runners are shared and noisy; the band only catches order-of-magnitude
-blowups such as an accidental retrace per step). The part of the step
-gate that must never be noise-excused is checked on the COMMITTED
-baseline, which is deterministic: every ``delta:*`` record marked
-``gated`` must show the overlapped exchange strictly beating the sync
-barrier (``overlap_us < sync_us``) — regenerate the baseline with
-``python -m benchmarks.bench_step --strict --json`` on a quiet machine;
+blowups such as an accidental retrace per step). Since the shape-bucketed
+grouping work this covers the per-stage ``breakdown:*`` keys too
+(compress/pack/apply/collective, each banded with an absolute floor so a
+few-ms residual stage can't flap), and the ``dispatch:tree`` census is
+gated EXACTLY — it is a static trace-time fact, so drift there is a
+dispatch-structure change, never noise. The other part of the step gate
+that must never be noise-excused is checked on the COMMITTED baseline,
+which is deterministic: every ``delta:*`` record marked ``gated`` must
+show the overlapped exchange strictly beating the sync barrier
+(``overlap_us < sync_us``) — regenerate the baseline with ``python -m
+benchmarks.bench_step --strict --breakdown --json`` on a quiet machine;
 --strict refuses to produce a baseline that would fail this.
 
     python scripts/check_bench.py FRESH BASELINE [--tolerance 0.02]
@@ -47,9 +52,23 @@ import sys
 
 GATED_METRICS = ("wire_bytes", "layout_bytes", "entropy_bytes")
 # step gate: wire_bytes on step rows stays tightly banded (it is static),
-# us_per_step rides the wide timing band below
-STEP_GATED_METRICS = ("wire_bytes", "us_per_step")
-STEP_TOLERANCE = 0.5                 # us_per_step band: runners are noisy
+# the timing metrics ride the wide band below. breakdown:* rows carry the
+# per-stage attribution (compress/pack/apply/collective) so a stage-local
+# blowup — e.g. per-leaf dispatch creeping back into compress — is caught
+# even when the total step time hides it in the band.
+STEP_GATED_METRICS = ("wire_bytes", "us_per_step",
+                      "compress_us", "pack_us", "apply_us", "collective_us")
+STEP_TIMING_METRICS = ("us_per_step", "compress_us", "pack_us", "apply_us",
+                       "collective_us")
+STEP_TOLERANCE = 0.5                 # timing band: runners are noisy
+# absolute slack on the step timing bands: the collective/pack residuals
+# are a few ms, where 50% relative is inside scheduler jitter — a stage
+# must regress by BOTH 50% and 2ms before it fails
+STEP_TIMING_FLOOR_US = 2000.0
+# rows whose metrics are static facts, gated exactly (no band): the
+# dispatch census is a trace-time property of tree + config, so any
+# drift means the grouping plan changed shape
+STEP_EXACT_KEYS = ("dispatch:tree",)
 
 # Longest-prefix tolerance overrides per composition key. Most byte counts
 # are static (shapes + k_cap + layout), hence the tight default; the
@@ -120,7 +139,8 @@ def main(argv=None) -> int:
     gated_metrics = GATED_METRICS if args.gate == "wire" else STEP_GATED_METRICS
     metric_tols = dict(METRIC_TOLERANCES)
     if args.gate == "step":
-        metric_tols["us_per_step"] = STEP_TOLERANCE
+        for m in STEP_TIMING_METRICS:
+            metric_tols[m] = STEP_TOLERANCE
 
     failures, notes = [], []
     if args.gate == "step":
@@ -135,6 +155,15 @@ def main(argv=None) -> int:
             failures.append(f"{key}: present in baseline but missing from "
                             "fresh run (benchmark coverage regressed)")
             continue
+        if args.gate == "step" and key in STEP_EXACT_KEYS:
+            for metric, bval in sorted(brec.items()):
+                xval = frec.get(metric)
+                if xval is None or float(xval) != float(bval):
+                    failures.append(
+                        f"{key}.{metric}: expected exactly {bval}, got "
+                        f"{xval} — the grouping plan is static, so this is "
+                        "a real dispatch-structure change, not noise")
+            continue
         for metric in gated_metrics:
             if metric not in brec:
                 continue
@@ -143,7 +172,10 @@ def main(argv=None) -> int:
                 continue
             b, x = float(brec[metric]), float(frec[metric])
             tol = band(key, metric, args.tolerance, metric_tols)
-            if x > b * (1 + tol):
+            ceil = b * (1 + tol)
+            if args.gate == "step" and metric in STEP_TIMING_METRICS:
+                ceil = max(ceil, b + STEP_TIMING_FLOOR_US)
+            if x > ceil:
                 failures.append(
                     f"{key}.{metric}: {x:.0f} > baseline {b:.0f} "
                     f"(+{(x / b - 1) * 100:.1f}%, band {tol * 100:.0f}%)")

@@ -24,7 +24,14 @@ The sparse wires are *bucketed*: every leaf's buffers are offset into one
 concatenated coordinate space and exchanged with a single all_gather pair
 per wire dtype, so a tree of hundreds of small leaves costs O(1) collectives
 instead of O(n_leaves). Tiny (dense-passthrough) leaves share one psum the
-same way. Each leaf ships under its statically stamped wire layout
+same way. Since the shape-bucketed compression plan (repro.core.grouping)
+the items this layer consumes are already GROUP-level: each sparse entry is
+one stacked ``SparseGrad`` of shape ``[rows, k_cap]`` covering every leaf of
+a (dtype, d, k_cap) shape bucket, with a ``members`` map slicing the rows
+back to leaves — structurally identical to the scan-stacked leaves this
+layer always handled, so packing, exchange, scatter order, and wire-byte
+accounting are unchanged (and byte-/bit-identical to the per-leaf item
+stream they replace). Each leaf ships under its statically stamped wire layout
 (repro.comm.wire_layout): int32 COO list, packed occupancy bitmap, an
 index-elided dense value run, or a Golomb-Rice delta-coded index stream
 (wire-format v3) — whichever realizes the fewest bytes, so full-capacity
@@ -145,63 +152,77 @@ def _compact_items(cfg: CompressionConfig, leaves: list, stk_leaves: list):
     """Fixed-capacity compaction of an already-dense (e.g. pod-averaged)
     tree: the single nonzero-selection of the inter-pod stage. Values are
     re-encoded into the configured codec's wire representation so the
-    inter-pod collective moves the same dtype as the intra-pod one."""
+    inter-pod collective moves the same dtype as the intra-pod one.
+    Emits the same group-level 3-tuple items as ``compress_tree_sparse``,
+    under the same cached grouping plan: one compact + encode dispatch per
+    shape bucket instead of one per leaf, lowered per the backend's
+    ``batched_emit`` preference exactly like the intra-pod emit (vmapped
+    batch on kernel backends, rolled ``lax.map`` on the jnp reference —
+    see ``repro.core.api._map_rows``)."""
+    from repro.core.grouping import plan_tree
+    from repro.core.sparse import resolve_backend
+
     scheme = cfg.scheme()
     codec = scheme.codec
+    batched = resolve_backend(cfg.backend, cfg.kernel_interpret).batched_emit
+    plan = plan_tree(cfg, leaves, stk_leaves)
     items = []
-
-    def layout_for(k_cap, d, leaf_dtype):
-        return wire_layout.choose(
-            k_cap, d, wire_layout.value_bits_of(codec.wire_dtype(leaf_dtype)),
-            cfg.wire_layout)
-
-    for leaf, stk in zip(leaves, stk_leaves):
-        if leaf.size < cfg.min_leaf_size:
-            items.append(("dense", leaf))
+    for grp in plan.groups:
+        if grp.kind == "dense":
+            parts = [leaves[i].reshape(-1).astype(jnp.float32)
+                     for i, _ in grp.members]
+            items.append(("dense",
+                          parts[0] if len(parts) == 1
+                          else jnp.concatenate(parts), grp.members))
             continue
-        zero = jnp.zeros((), jnp.float32)
-        if stk and leaf.ndim >= 2 and leaf.shape[0] > 1:
-            layers = leaf.shape[0]
-            d_l = leaf.size // layers
-            k_cap = scheme.selector.capacity(d_l, cfg.capacity_slack)
-            vals, idx, nnz = jax.vmap(
-                lambda row: compaction.compact(row, k_cap))(
-                    leaf.reshape(layers, d_l))
-            vals, scale = jax.vmap(lambda v: _encode_det(codec, v))(vals)
-            items.append(("sparse", SparseGrad(
-                values=vals, idx=idx, nnz=nnz,
-                p_sum=nnz.astype(jnp.float32),   # deterministic: E[nnz]=nnz
-                bits=jnp.zeros((layers,), jnp.float32),
-                var_ratio=jnp.zeros((layers,), jnp.float32),
-                scale=scale, d=d_l, shape=(d_l,), codec=codec.name,
-                layout=layout_for(k_cap, d_l, leaf.dtype))))
-            continue
-        k_cap = scheme.selector.capacity(leaf.size, cfg.capacity_slack)
-        vals, idx, nnz = compaction.compact(leaf, k_cap)
-        vals, scale = _encode_det(codec, vals)
+        stack_parts = [leaves[i].reshape(rows, grp.d)
+                       for i, rows in grp.members]
+        stack = (stack_parts[0] if len(stack_parts) == 1
+                 else jnp.concatenate(stack_parts))
+        def _compact_encode(row, _k_cap=grp.k_cap):
+            vals, idx, nnz = compaction.compact(row, _k_cap)
+            vals, scale = _encode_det(codec, vals)
+            return vals, idx, nnz, scale
+        vals, idx, nnz, scale = (
+            jax.vmap(_compact_encode)(stack) if batched
+            else jax.lax.map(_compact_encode, stack))
+        leaf_dtype = leaves[grp.members[0][0]].dtype
         items.append(("sparse", SparseGrad(
-            values=vals, idx=idx, nnz=nnz, p_sum=nnz.astype(jnp.float32),
-            bits=zero, var_ratio=zero, scale=scale, d=leaf.size,
-            shape=tuple(leaf.shape), codec=codec.name,
-            layout=layout_for(k_cap, leaf.size, leaf.dtype))))
+            values=vals, idx=idx, nnz=nnz,
+            p_sum=nnz.astype(jnp.float32),   # deterministic: E[nnz]=nnz
+            bits=jnp.zeros((grp.rows,), jnp.float32),
+            var_ratio=jnp.zeros((grp.rows,), jnp.float32),
+            scale=scale, d=grp.d, shape=(grp.d,), codec=codec.name,
+            layout=wire_layout.choose(
+                grp.k_cap, grp.d,
+                wire_layout.value_bits_of(codec.wire_dtype(leaf_dtype)),
+                cfg.wire_layout)), grp.members))
     return items
 
 
-def _compaction_drop(cfg: CompressionConfig, leaf: jax.Array,
-                     sg: SparseGrad) -> jax.Array:
-    """What the fixed-capacity pod message failed to carry of ``leaf``:
+def _compaction_drops(items: list, leaves: list) -> list:
+    """What the fixed-capacity pod messages failed to carry, per leaf:
     leaf minus the scatter of the codec-decoded transmitted buffers.
     Nonzero exactly on compaction overflow — the pod-union of M workers'
     coordinates routinely exceeds one worker's k_cap — and on codec
-    rounding of kept values (bf16, qsgd levels, ternary)."""
-    vals = sg.decode_values()
-    if sg.values.ndim == 2:                  # stacked: per-layer scatter
-        sent = jax.vmap(lambda v, i: compaction.scatter(v, i, sg.d))(
-            vals, sg.idx).reshape(-1)
-    else:
-        sent = compaction.scatter(vals, sg.idx, sg.d)
-    drop = leaf.astype(jnp.float32).reshape(-1) - sent
-    return drop.reshape(leaf.shape).astype(leaf.dtype)
+    rounding of kept values (bf16, qsgd levels, ternary). One batched
+    scatter per sparse group; dense-passthrough leaves drop nothing."""
+    drops: list = [None] * len(leaves)
+    for kind, payload, members in items:
+        if kind == "dense":
+            for i, _ in members:
+                drops[i] = jnp.zeros_like(leaves[i])
+            continue
+        sent = jax.vmap(lambda v, ix: compaction.scatter(v, ix, payload.d))(
+            payload.decode_values(), payload.idx)
+        r0 = 0
+        for i, rows in members:
+            leaf = leaves[i]
+            drop = (leaf.astype(jnp.float32).reshape(-1)
+                    - sent[r0:r0 + rows].reshape(-1))
+            drops[i] = drop.reshape(leaf.shape).astype(leaf.dtype)
+            r0 += rows
+    return drops
 
 
 def _bucketed_sync(items: list, leaves: list, axis: Axis,
@@ -238,32 +259,34 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
     """
     m = _axis_size(axis)
     codec = cfg.scheme().codec
-    out: list = [None] * len(items)
+    out: list = [None] * len(leaves)
     wire = 0.0
     overflow = jnp.asarray(0, jnp.int32)
 
     dense_ids: list = []
     sparse_groups: dict = {}
-    for i, (kind, payload) in enumerate(items):
+    for e, (kind, payload, _members) in enumerate(items):
         if kind == "dense":
-            dense_ids.append(i)
+            dense_ids.append(e)
         else:
             sparse_groups.setdefault(jnp.dtype(payload.values.dtype),
-                                     []).append(i)
+                                     []).append(e)
 
     if dense_ids:
         # one f32 psum for all tiny leaves: f32 keeps the mean exact for
         # low-precision leaves, and the accounting charges what the HLO
-        # collective actually moves (4 bytes/element).
+        # collective actually moves (4 bytes/element). The payloads are
+        # already concatenated per group; member runs slice them back.
         flat = jnp.concatenate(
-            [items[i][1].reshape(-1).astype(jnp.float32) for i in dense_ids])
+            [items[e][1].reshape(-1).astype(jnp.float32) for e in dense_ids])
         synced = jax.lax.pmean(flat, axis)
         off = 0
-        for i in dense_ids:
-            leaf = leaves[i]
-            out[i] = (synced[off:off + leaf.size].reshape(leaf.shape)
-                      .astype(leaf.dtype))
-            off += leaf.size
+        for e in dense_ids:
+            for i, n in items[e][2]:
+                leaf = leaves[i]
+                out[i] = (synced[off:off + n].reshape(leaf.shape)
+                          .astype(leaf.dtype))
+                off += n
         wire += float(flat.size * 4)
 
     for wdt, ids in sorted(sparse_groups.items(), key=lambda kv: str(kv[0])):
@@ -360,10 +383,14 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
         dense = jnp.zeros((coord_off,), jnp.float32)
         dense = dense.at[jnp.concatenate(coord_parts, axis=1).reshape(-1)].add(
             jnp.concatenate(upd_parts, axis=1).reshape(-1), mode="drop") / m
-        for (i, lp, _, _, c0, _) in plans:
-            leaf = leaves[i]
-            out[i] = (dense[c0:c0 + lp.block].reshape(leaf.shape)
-                      .astype(leaf.dtype))
+        for (e, lp, _, _, c0, _) in plans:
+            seg = dense[c0:c0 + lp.block]
+            r0 = 0
+            for i, rows in items[e][2]:
+                leaf = leaves[i]
+                out[i] = (seg[r0 * lp.d:(r0 + rows) * lp.d]
+                          .reshape(leaf.shape).astype(leaf.dtype))
+                r0 += rows
         wire += float(vals_flat.size) * wdt.itemsize
 
     return out, wire, overflow
@@ -403,12 +430,14 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
     returns, bit-identical outputs, identical wire-byte accounting —
     different collective structure (see the module docstring).
 
-    Sparse leaves are walked in reverse order and greedily grouped into
+    Sparse entries (shape groups since the grouped compression plan — each
+    covers every leaf of one (dtype, d, k_cap) bucket and is an atomic
+    unit here) are walked in reverse order and greedily packed into
     buckets of at most ``cfg.overlap_bucket_bytes`` payload (a single
-    leaf always fits — its stream is never split). Each bucket's leaf
+    entry always fits — its stream is never split). Each bucket's entry
     streams concatenate into ONE int32 all_gather:
 
-        leaf stream = [counts (rice, layers words)]
+        entry stream = [counts (rice, layers words)]
                       [index words (layers*idx_len; coo pre-offset by
                        its layer strides — each leaf scatters into its
                        OWN block, so no cross-leaf coordinate space)]
@@ -434,12 +463,13 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
     """
     m = _axis_size(axis)
     codec = cfg.scheme().codec
-    out: list = [None] * len(items)
+    out: list = [None] * len(leaves)
     wire = 0.0
     overflow = jnp.asarray(0, jnp.int32)
 
-    dense_ids = [i for i, (kind, _) in enumerate(items) if kind == "dense"]
-    sparse_ids = [i for i, (kind, _) in enumerate(items) if kind == "sparse"]
+    dense_ids = [e for e, (kind, _, _) in enumerate(items) if kind == "dense"]
+    sparse_ids = [e for e, (kind, _, _) in enumerate(items)
+                  if kind == "sparse"]
 
     # --- pack + issue, reverse-backward order ---------------------------
     # buckets: list of (segs, stream, vstream|None) where segs =
@@ -522,14 +552,15 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
         # tiny-leaf psum, issued after the sparse buckets so the sparse
         # collectives lead the schedule; f32 like _bucketed_sync
         flat = jnp.concatenate(
-            [items[i][1].reshape(-1).astype(jnp.float32) for i in dense_ids])
+            [items[e][1].reshape(-1).astype(jnp.float32) for e in dense_ids])
         synced = jax.lax.pmean(flat, axis)
         off = 0
-        for i in dense_ids:
-            leaf = leaves[i]
-            out[i] = (synced[off:off + leaf.size].reshape(leaf.shape)
-                      .astype(leaf.dtype))
-            off += leaf.size
+        for e in dense_ids:
+            for i, n in items[e][2]:
+                leaf = leaves[i]
+                out[i] = (synced[off:off + n].reshape(leaf.shape)
+                          .astype(leaf.dtype))
+                off += n
         wire += float(flat.size * 4)
 
     # --- consume, same order the buckets were issued --------------------
@@ -589,10 +620,14 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
             jnp.concatenate(coord_parts, axis=1).reshape(-1)].add(
             jnp.concatenate(upd_parts, axis=1).reshape(-1), mode="drop") / m
         off = 0
-        for (i, lp, _, _, _, _) in segs:
-            leaf = leaves[i]
-            out[i] = (dense[off:off + lp.block].reshape(leaf.shape)
-                      .astype(leaf.dtype))
+        for (e, lp, _, _, _, _) in segs:
+            seg = dense[off:off + lp.block]
+            r0 = 0
+            for i, rows in items[e][2]:
+                leaf = leaves[i]
+                out[i] = (seg[r0 * lp.d:(r0 + rows) * lp.d]
+                          .reshape(leaf.shape).astype(leaf.dtype))
+                r0 += rows
             off += lp.block
 
     return out, wire, overflow
@@ -683,10 +718,7 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
                     # worker of the pod carries the same drop, so the next
                     # intra-pod mean reinstates it — exactly the 1/P global
                     # weight the dense pod stage would have given it)
-                    drops = [jnp.zeros_like(leaf) if kind == "dense"
-                             else _compaction_drop(cfg, leaf, payload)
-                             for (kind, payload), leaf in zip(items2,
-                                                              synced_leaves)]
+                    drops = _compaction_drops(items2, synced_leaves)
                     new_res = jax.tree.map(
                         lambda r, d: r + d, new_res,
                         jax.tree_util.tree_unflatten(treedef, drops))

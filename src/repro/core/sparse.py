@@ -138,6 +138,16 @@ class SparseGrad:
 class Backend(Protocol):
     """A gradient-compression backend: dense leaf in, SparseGrad out."""
     name: str
+    # How the grouped tree plan (repro.core.grouping) lowers one shape
+    # group's [rows, d] emit. True: vmap the whole stack — one batched
+    # kernel launch, what the pallas grid wants. False: a rolled
+    # ``lax.map`` over rows — still ONE dispatch per group in the trace,
+    # but each row's working set stays cache-resident, which is how
+    # XLA:CPU wins (a vmapped solver streams the full stack through
+    # memory once per elementwise pass). Either lowering is bit-identical
+    # to the other and to the retired per-leaf walk: every row computes
+    # independently with a counter-based PRNG.
+    batched_emit: bool
 
     def compress_sparse(self, cfg, key: jax.Array, g: jax.Array,
                         k_cap: int) -> SparseGrad:
@@ -191,6 +201,7 @@ class ReferenceBackend:
     """The scheme's dense-layout pipeline + a single magnitude top_k per
     leaf. Shares the dense wire's computation, hence bit-identical to it."""
     name = "reference"
+    batched_emit = False     # rolled per-row emit: cache-resident on CPU
 
     def compress_sparse(self, cfg, key, g, k_cap) -> SparseGrad:
         scheme = cfg.scheme()
@@ -267,6 +278,7 @@ class PallasBackend:
     and bernoulli (TernGrad's selection). The identity selector has no
     sparse structure to exploit and delegates to the reference backend."""
     name = "pallas"
+    batched_emit = True      # vmap extends the kernel grid: one launch/group
 
     FUSED_SELECTORS = ("gspar", "unisp", "topk", "bernoulli")
 

@@ -86,15 +86,19 @@ def greedy_probabilities(g: jax.Array, rho: float | jax.Array,
     rho_d = jnp.asarray(rho, jnp.float32) * jnp.float32(d)   # d may exceed int32
     p0 = jnp.minimum(_safe_div(rho_d * a, jnp.sum(a)), 1.0)
 
-    def body(_, p):
+    # num_iters is a static compile-time constant (the paper uses 2), so the
+    # loop unrolls instead of lowering to a while-op: XLA fuses each
+    # rescale's elementwise update into the next iteration's reductions,
+    # where the while-op form forced p to round-trip through memory per
+    # trip. Bit-identical to the rolled form — same ops in the same order.
+    p = p0
+    for _ in range(num_iters):
         active = p < 1.0
         n_active = jnp.sum(active, dtype=jnp.float32)
         target = rho_d - (jnp.float32(d) - n_active)  # rho*d - d + |I|
         c = _safe_div(target, jnp.sum(jnp.where(active, p, 0.0)))
         c = jnp.maximum(c, 1.0)                      # c <= 1 -> break (no-op)
-        return jnp.minimum(c * p, 1.0)
-
-    p = jax.lax.fori_loop(0, num_iters, body, p0)
+        p = jnp.minimum(c * p, 1.0)
     p = jnp.where(a > 0, p, 0.0)
     return p.reshape(shape)
 

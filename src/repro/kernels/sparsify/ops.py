@@ -19,6 +19,12 @@ out (no post-kernel ``rice_encode``). One emit wrapper per selector:
 one XLA sort, then the same fused sample+write), ``unisp_emit``,
 ``bern_emit``, ``topk_emit``. The legacy ``gspar_sparse(_ef)`` wrappers
 now route through the same pipeline.
+
+Every emit wrapper is rank-polymorphic over a leading batch when driven
+through ``jax.vmap`` — the shape-bucketed tree plan
+(repro.core.grouping) relies on this to run one batched emit per shape
+group instead of one dispatch per leaf, so keep new wrappers free of
+Python-level branching on values and of shape-dependent side outputs.
 """
 from __future__ import annotations
 
@@ -261,7 +267,8 @@ def topk_emit(g: jax.Array, u_cod: jax.Array | None = None, *, k_cap: int,
     a = jnp.abs(flat.astype(jnp.float32))
     topv = jax.lax.top_k(a, k_target)[0]
     t = topv[-1]
-    budget = jnp.float32(k_target) - jnp.sum((topv > t).astype(jnp.float32))
+    budget = jnp.float32(k_target) - (jnp.count_nonzero(topv > t)
+                                      .astype(jnp.float32))
     return _two_pass(flat, None, t, budget, pkind="topk", codec=codec,
                      k_cap=k_cap, rice_r=rice_r, ef=ef, u_cod=u_cod,
                      interpret=interpret)

@@ -134,8 +134,10 @@ def _build_lowered(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
                 step7 = dataclasses.replace(comp, wire="dense")
                 step = step_lib.make_fsdp_train_step(cfg, step7, opt, mesh,
                                                      act_rules)
-            lowered = jax.jit(step).lower(params_sds, opt_sds, batch_sds,
-                                          key_sds)
+            # donate params/opt_state like launch.train: the dryrun cost
+            # model should price the schedule the real launcher compiles
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params_sds, opt_sds, batch_sds, key_sds)
         elif kind == "prefill":
             cache_sds, _ = specs_lib.cache_structs(cfg, shape_name,
                                                    state_rules, mesh)

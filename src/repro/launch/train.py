@@ -136,12 +136,18 @@ def main(argv=None):
                                                                 multi_pod))
                     if mode == "compressed" else init_feedback(params))
     with jax.set_mesh(mesh):
+        # Donate params/opt_state (and the EF residual, which the grouped
+        # compression path consumes into fresh stacked buffers) — the train
+        # loop rebinds all of them every step, so XLA can reuse their HBM
+        # for the step's outputs instead of holding both copies live.
+        donate = (0, 1, 2) if ef_state is not None else (0, 1)
         if mode == "compressed":
             train_step = jax.jit(step_lib.make_compressed_train_step(
-                cfg, comp, opt, mesh, rules, multi_pod=multi_pod))
+                cfg, comp, opt, mesh, rules, multi_pod=multi_pod),
+                donate_argnums=donate)
         else:
             train_step = jax.jit(step_lib.make_fsdp_train_step(
-                cfg, comp, opt, mesh, rules))
+                cfg, comp, opt, mesh, rules), donate_argnums=donate)
 
         key = jax.random.key(1)
         t0 = time.time()

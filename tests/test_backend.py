@@ -93,7 +93,7 @@ class TestSingleSelection:
 
         def compress(key, grads):
             items, _, _, _ = compress_tree_sparse(cfg, key, grads)
-            (kind, sg), = items
+            (kind, sg, _), = items
             return sg.values, sg.idx
 
         return (jax.jit(compress)
@@ -116,7 +116,7 @@ class TestSingleSelection:
 
         def compress(key, grads):
             items, _, _, _ = compress_tree_sparse(cfg, key, grads)
-            (kind, sg), = items
+            (kind, sg, _), = items
             return sg.values, sg.idx
 
         hlo = (jax.jit(compress)
@@ -196,7 +196,7 @@ class TestSolverParity:
         key = jax.random.key(3)
         items, _, _, _ = compress_tree_sparse(cfg, key, {"g": g},
                                            stacked={"g": True})
-        (_, sg), = items
+        (_, sg, _), = items
         assert sg.values.shape[0] == layers
         (leaf_key,) = jax.random.split(key, 1)
         lk = jax.random.split(leaf_key, layers)

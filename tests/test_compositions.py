@@ -44,7 +44,23 @@ STACKED = {"w": False, "stack": True, "tiny": False}
 
 
 def _densify_items(items, treedef):
-    leaves = [p if kind == "dense" else p.densify() for kind, p in items]
+    """Per-leaf dense reconstructions from the GROUP-level item stream:
+    slice each group's concatenated payload / stacked rows back to leaves
+    via its members map. Leaves come back flattened (per layer for
+    stacked) — callers reshape against the reference tree."""
+    leaves = [None] * treedef.num_leaves
+    for kind, p, members in items:
+        if kind == "dense":
+            off = 0
+            for i, sz in members:
+                leaves[i] = p[off:off + sz]
+                off += sz
+        else:
+            dense = p.densify()                  # [rows, d]
+            r0 = 0
+            for i, rows in members:
+                leaves[i] = dense[r0:r0 + rows].reshape(-1)
+                r0 += rows
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
@@ -87,9 +103,9 @@ class TestCompositionWireEquivalence:
         cfg = CompressionConfig(name=name, wire="gather", min_leaf_size=8,
                                 backend="reference")
         items, _, _, _ = compress_tree_sparse(cfg, jax.random.key(0), grads)
-        (_, sg), = items
+        (_, sg, _), = items
         assert sg.k_cap == grads["w"].size       # full capacity: zero bias
-        assert int(sg.overflow()) == 0
+        assert int(jnp.sum(sg.overflow())) == 0
         assert sg.values.dtype in (jnp.int8, jnp.int16)
 
     def test_ternary_codec_lossless_after_bernoulli(self):
@@ -101,13 +117,13 @@ class TestCompositionWireEquivalence:
         cfg = CompressionConfig(name="terngrad", wire="gather",
                                 min_leaf_size=8, backend="reference")
         items, _, _, _ = compress_tree_sparse(cfg, jax.random.key(5), g)
-        (_, sg), = items
+        (_, sg, _), = items
         dec = np.asarray(sg.decode_values())
         scale = np.asarray(sg.scale, np.float32)
         nz = dec[dec != 0]
         assert len(nz) > 0
         # nothing zeroed by the codec: every selected coordinate survived
-        assert len(nz) == int(sg.nnz)
+        assert len(nz) == int(jnp.sum(sg.nnz))
         np.testing.assert_array_equal(np.abs(nz), np.full(nz.shape, scale))
         # and the scale is max|g| up to amplification roundoff
         np.testing.assert_allclose(scale, float(jnp.max(jnp.abs(g["w"]))),
@@ -135,11 +151,11 @@ class TestPallasCodecPaths:
             CompressionConfig(**base, backend="pallas"), key, g)
         ref_items, _, _, ref_stats = compress_tree_sparse(
             CompressionConfig(**base, backend="reference"), key, g)
-        (_, sg), = pal_items
+        (_, sg, _), = pal_items
         assert sg.values.dtype == wdt
         a = np.asarray(ref_items[0][1].densify())
         b = np.asarray(sg.densify())
-        scale = float(np.asarray(sg.scale))
+        scale = float(np.asarray(sg.scale).reshape(()))
         if codec == "bf16":
             # selection uniforms are shared (same key, in-kernel cast):
             # support and values agree up to draw-at-threshold coords
@@ -286,7 +302,7 @@ class TestClosedFormSparseParity:
         items, _, treedef, _ = compress_tree_sparse(
             CompressionConfig(name="gspar", wire="gather", **kw), key,
             grads, stacked=STACKED)
-        for (kind, payload) in items:
+        for (kind, payload, _) in items:
             if kind == "sparse":
                 assert int(jnp.sum(payload.overflow())) == 0
         recon = _densify_items(items, treedef)
@@ -389,6 +405,132 @@ class TestCompositionCodingModel:
 
 
 # ---------------------------------------------------------------------------
+# Shape-bucketed grouping: bit-identity vs the per-leaf formulation, and the
+# O(groups) dispatch count
+# ---------------------------------------------------------------------------
+
+# duplicate AND unique shapes: "a"/"b" share the 4096 group, the stacked
+# leaf's 2048-rows share a group with the flat "c", "tiny" rides the dense
+# passthrough group
+def _group_tree(seed):
+    rng = np.random.default_rng(seed)
+    t = {
+        "a": jnp.asarray(rng.standard_normal(4096), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal(4096), jnp.float32),
+        "stack": jnp.asarray(rng.standard_normal((3, 2048)), jnp.float32),
+        "c": jnp.asarray(rng.standard_normal(2048), jnp.float32),
+        "tiny": jnp.asarray(rng.standard_normal(16), jnp.float32),
+    }
+    stk = {"a": False, "b": False, "stack": True, "c": False, "tiny": False}
+    return t, stk
+
+
+class TestGroupedDispatch:
+    """The shape-bucketed compression plan (repro.core.grouping): one
+    vmapped emit per (dtype, d, k_cap) group must be BIT-identical to
+    compressing every leaf separately with its own dispatch — same per-leaf
+    PRNG keys, same per-row selector math — on both backends, with and
+    without error feedback; and the grouped path must compile at most one
+    emit computation per shape group."""
+
+    def _per_leaf(self, cfg, key, grads, stacked):
+        """The retired per-leaf formulation, reconstructed leaf by leaf:
+        one backend dispatch per leaf under compress_tree_sparse's exact
+        key discipline (per-leaf split, per-layer split when stacked)."""
+        from repro.core.grouping import leaf_rows
+        from repro.core.sparse import resolve_backend
+        backend = resolve_backend(cfg.backend, cfg.kernel_interpret)
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        stk = jax.tree_util.tree_flatten(stacked)[0]
+        keys = jax.random.split(key, len(leaves))
+        dense_out, res_out = [], []
+        for leaf, k, s in zip(leaves, keys, stk):
+            if leaf.size < cfg.min_leaf_size:
+                dense_out.append(leaf.astype(jnp.float32).reshape(-1))
+                res_out.append(jnp.zeros_like(leaf))
+                continue
+            rows, d = leaf_rows(tuple(leaf.shape), s)
+            k_cap = cfg.capacity(d)
+            lk = (jax.random.split(k, rows) if rows > 1 else k[None])
+            if cfg.error_feedback:
+                sg, res = jax.vmap(lambda kk, gg: backend.compress_sparse_ef(
+                    cfg, kk, gg, k_cap))(lk, leaf.reshape(rows, d))
+                res_out.append(res.reshape(leaf.shape))
+            else:
+                sg = jax.vmap(lambda kk, gg: backend.compress_sparse(
+                    cfg, kk, gg, k_cap))(lk, leaf.reshape(rows, d))
+            dense_out.append(sg.densify().reshape(-1))
+        return dense_out, res_out, treedef
+
+    @pytest.mark.parametrize("backend", ["reference", "pallas"])
+    @pytest.mark.parametrize("ef", [False, True])
+    def test_grouped_bit_identical_to_per_leaf(self, backend, ef):
+        grads, stk = _group_tree(31)
+        key = jax.random.key(23)
+        cfg = CompressionConfig(name="gspar", rho=0.05, wire="gather",
+                                min_leaf_size=64, capacity_slack=4.0,
+                                backend=backend, error_feedback=ef)
+        res0 = jax.tree.map(jnp.zeros_like, grads) if ef else None
+        items, res_g, treedef, _ = compress_tree_sparse(
+            cfg, key, grads, stacked=stk, residual=res0)
+        recon = _densify_items(items, treedef)
+        ref_dense, ref_res, _ = self._per_leaf(cfg, key, grads, stk)
+        for a, b in zip(ref_dense, jax.tree.leaves(recon)):
+            np.testing.assert_array_equal(np.asarray(a),
+                                          np.asarray(b).reshape(a.shape))
+        if ef:
+            for a, b in zip(ref_res, jax.tree.leaves(res_g)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_plan_collapses_duplicate_shapes(self):
+        from repro.core.grouping import plan_tree
+        grads, stk = _group_tree(0)
+        cfg = CompressionConfig(name="gspar", rho=0.05, wire="gather",
+                                min_leaf_size=64, capacity_slack=4.0)
+        leaves = jax.tree.leaves(grads)
+        plan = plan_tree(cfg, leaves, jax.tree.leaves(stk))
+        # 5 leaves -> 2 sparse groups (4096x2; 2048: 3 stacked rows + flat)
+        # + 1 dense passthrough group
+        assert plan.n_leaves == 5
+        assert plan.dispatch_count == 2
+        kinds = [g.kind for g in plan.groups]
+        assert kinds.count("sparse") == 2 and kinds.count("dense") == 1
+        rows = {(g.d, g.rows) for g in plan.groups if g.kind == "sparse"}
+        assert rows == {(4096, 2), (2048, 4)}
+        # cached: same config + same specs -> the identical plan object
+        assert plan is plan_tree(cfg, leaves, jax.tree.leaves(stk))
+
+    def test_trace_count_one_emit_per_group(self):
+        """Compiled-HLO dispatch count: the reference backend's compaction
+        costs exactly one sort (top_k) per EMIT COMPUTATION, so the whole
+        5-leaf tree must compile exactly one sort per sparse shape group —
+        the O(leaves) -> O(groups) claim on the artifact XLA actually
+        runs."""
+        from repro.core.grouping import plan_tree
+        grads, stk = _group_tree(2)
+        cfg = CompressionConfig(name="gspar", rho=0.05, wire="gather",
+                                min_leaf_size=64, capacity_slack=4.0,
+                                backend="reference")
+        plan = plan_tree(cfg, jax.tree.leaves(grads), jax.tree.leaves(stk))
+        assert plan.dispatch_count == 2          # < 4 sparse leaves
+
+        def compress(key, g):
+            items, _, _, _ = compress_tree_sparse(cfg, key, g, stacked=stk)
+            return [(sg.values, sg.idx) for kind, sg, _ in items
+                    if kind == "sparse"]
+
+        hlo = (jax.jit(compress)
+               .lower(jax.random.key(0), grads).compile().as_text())
+        n = 0
+        for ln in hlo.splitlines():
+            if " sort(" in ln or ln.strip().startswith("sort("):
+                n += 1
+            elif 'custom_call_target="TopK"' in ln:
+                n += 1
+        assert n == plan.dispatch_count, hlo.count("sort")
+
+
+# ---------------------------------------------------------------------------
 # Bucket coordinate-space guard
 # ---------------------------------------------------------------------------
 
@@ -417,7 +559,7 @@ class TestBucketGuard:
 
         cfg = CompressionConfig(name="gspar", rho=0.001, wire="gather",
                                 min_leaf_size=8)
-        items = [("sparse", mock_leaf()) for _ in range(3)]
+        items = [("sparse", mock_leaf(), ((i, 1),)) for i in range(3)]
         leaves = [None] * 3                      # untouched before the guard
         mesh = jax.make_mesh((1,), ("data",))
 

@@ -209,7 +209,7 @@ class TestWireEquivalence:
                                 error_feedback=True, backend=backend,
                                 capacity_slack=4.0)
         items, res, _, _ = compress_tree_sparse(cfg, key, g, residual=res0)
-        (_, sg), = items
+        (_, sg, _), = items
         assert sg.values.dtype == {"bf16": jnp.bfloat16, "qsgd8": jnp.int16,
                                    "ternary": jnp.int8}[codec]
         decoded = sg.decode_values()
@@ -222,7 +222,7 @@ class TestWireEquivalence:
         cfg_f32 = dataclasses.replace(cfg, codec="f32")
         items_f32, _, _, _ = compress_tree_sparse(cfg_f32, key, g,
                                                   residual=res0)
-        (_, sg_f32), = items_f32
+        (_, sg_f32, _), = items_f32
         gap = float(jnp.max(jnp.abs(sg.densify() - sg_f32.densify())))
         assert gap > 0.0
 

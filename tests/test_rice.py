@@ -306,7 +306,7 @@ class TestRiceOnTheWire:
                                               grads, stacked=STACKED)
         expect = 0.0
         capacity = 0.0
-        for kind, p in items:
+        for kind, p, _ in items:
             if kind == "dense":
                 expect += p.size * 4
                 capacity += p.size * 4
@@ -331,7 +331,7 @@ class TestRiceOnTheWire:
             cfg = CompressionConfig(name="gspar", rho=0.01, wire="gather",
                                     min_leaf_size=8, backend=backend)
             items, _, _, _ = compress_tree_sparse(cfg, jax.random.key(1), g)
-            (_, sg), = items
+            (_, sg, _), = items
             assert sg.layout == "rice"
 
     def test_two_phase_exchange_multi_worker(self):

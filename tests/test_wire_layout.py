@@ -189,7 +189,7 @@ class TestBitmapRoundtrip:
                                 min_leaf_size=8, backend="pallas",
                                 wire_layout="bitmap")
         items, _, _, _ = compress_tree_sparse(cfg, jax.random.key(2), g)
-        (_, sg), = items
+        (_, sg, _), = items
         assert sg.idx_sorted and sg.layout == "bitmap"
         lp = wire_layout.plan(sg)
         v, w, _ = wire_layout.pack(sg, lp)
@@ -270,7 +270,7 @@ class TestLayoutWireEquivalence:
                                               jax.random.fold_in(key, 0),
                                               grads, stacked=STACKED)
         expect = 0.0
-        for kind, p in items:
+        for kind, p, _ in items:
             if kind == "dense":
                 expect += p.size * 4
                 continue
@@ -338,7 +338,7 @@ class TestIndexElision:
 
         def stamp(cfg):
             items, _, _, _ = compress_tree_sparse(cfg, key, grads)
-            (_, sg), = items
+            (_, sg, _), = items
             return sg.layout
 
         base = dict(wire="gather", min_leaf_size=8, backend="reference")
@@ -358,7 +358,7 @@ class TestIndexElision:
                                 wire="gather", min_leaf_size=8,
                                 backend="reference")
         items, _, _, _ = compress_tree_sparse(cfg, jax.random.key(1), grads)
-        (_, sg), = items
+        (_, sg, _), = items
         assert sg.realized_wire_bits() == coding.realized_wire_bits(
             sg.layout, sg.k_cap, sg.d, sg.values.dtype.itemsize * 8)
 
