@@ -11,7 +11,7 @@ import numpy as np
 
 from benchmarks.common import save_json, timed_us
 from repro.core import coding, sparsify
-from repro.core.compressors import make_compressor
+from repro.api import make_compressor
 
 
 def _approx_sparse(seed, d, s, rho):

@@ -141,7 +141,7 @@ def run(quick: bool = False, return_payload: bool = False):
                 if ef:
                     def step(key, g, res):
                         return sync_tree(cfg, key, g, data_axis="data",
-                                         residual=res)
+                                         feedback=res)
                     args = (jax.random.key(7), grads,
                             jax.tree.map(jnp.zeros_like, grads))
                 else:

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import coding, sparsify
-from repro.core.compressors import make_compressor
+from repro.api import make_compressor
 
 rng = np.random.default_rng(0)
 d = 10_000

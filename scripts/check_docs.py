@@ -11,7 +11,12 @@ Defaults to every tracked top-level .md plus docs/. Two checks, both cheap
   * every fenced ``python`` code block either compiles (``compile()`` —
     a syntax check, nothing is executed) or is explicitly marked
     non-runnable with a ``# doctest: skip`` line. Other languages
-    (bash, text, yaml) are not checked.
+    (bash, text, yaml) are not checked;
+  * no code outside ``src/repro`` deep-imports package internals (the
+    deprecated ``repro.core.compressors`` path, ``repro.core._compressors``,
+    or private ``repro.comm.sync`` helpers) — the same contract the ruff
+    TID251 banned-api config enforces in the lint job, duplicated here so
+    it is checkable on a bare python with no ruff installed.
 
 Exit 1 with a file:line-prefixed report on any violation.
 """
@@ -81,6 +86,47 @@ def check_snippets(path: pathlib.Path, lines: list[str]) -> list[str]:
     return errors
 
 
+# deep-import bans outside src/repro (mirror of [tool.ruff.lint
+# .flake8-tidy-imports.banned-api] in pyproject.toml)
+BANNED_MODULES = ("repro.core.compressors", "repro.core._compressors")
+SYNC_IMPORT_RE = re.compile(r"from\s+repro\.comm\.sync\s+import\s+(.+)")
+LINT_EXEMPT = {
+    "tests/test_api.py",       # asserts the deprecated path warns
+    "scripts/check_docs.py",   # this lint names the banned strings
+}
+CODE_ROOTS = ("tests", "benchmarks", "examples", "scripts")
+
+
+def check_private_imports() -> list[str]:
+    errors = []
+    for root in CODE_ROOTS:
+        for f in sorted((REPO / root).rglob("*.py")):
+            rel = str(f.relative_to(REPO))
+            if rel in LINT_EXEMPT:
+                continue
+            for ln, line in enumerate(f.read_text().splitlines(), 1):
+                code = line.split("#", 1)[0]
+                if "repro" not in code:
+                    continue
+                for mod in BANNED_MODULES:
+                    if mod in code:
+                        errors.append(
+                            f"{rel}:{ln}: deep import of {mod!r} — use the "
+                            "repro.api facade")
+                m = SYNC_IMPORT_RE.search(code)
+                if m and any(n.strip().startswith("_")
+                             for n in m.group(1).split(",")):
+                    errors.append(
+                        f"{rel}:{ln}: private repro.comm.sync import — "
+                        "sync_tree (repro.api) dispatches the exchange "
+                        "from the config")
+                if "repro.comm.sync._" in code:
+                    errors.append(
+                        f"{rel}:{ln}: private repro.comm.sync attribute — "
+                        "use the repro.api facade")
+    return errors
+
+
 def main(argv=None) -> int:
     args = (argv if argv is not None else sys.argv[1:])
     files = ([pathlib.Path(a).resolve() for a in args] if args
@@ -90,6 +136,8 @@ def main(argv=None) -> int:
         lines = path.read_text().splitlines()
         errors += check_links(path, lines)
         errors += check_snippets(path, lines)
+    if not args:                       # default run covers the code lint too
+        errors += check_private_imports()
     for e in errors:
         print(f"::error::{e}")
     if errors:

@@ -71,6 +71,11 @@ def main():
         sys.exit(1)
     with open(out) as f:
         rec = json.load(f)
+    # the dryrun logs CompressionConfig.describe() on stderr — carry it as
+    # the sweep label so perf records are self-describing
+    comp_label = next((ln.split("compression: ", 1)[1]
+                       for ln in proc.stderr.splitlines()
+                       if "compression: " in ln), None)
 
     if args.baseline_from:
         with open(args.baseline_from) as f:
@@ -95,7 +100,7 @@ def main():
     os.makedirs(PERF, exist_ok=True)
     record = {
         "pair": args.pair, "iter": args.iter, "change": args.change,
-        "hypothesis": args.hypothesis,
+        "hypothesis": args.hypothesis, "compression": comp_label,
         "dominant_before": dom_term, "dominant_after": rec["dominant"],
         "before": before_v, "after": after_v,
         "improvement": improve, "verdict": f"{verdict} ({improve * 100:+.1f}%)",
@@ -108,8 +113,9 @@ def main():
     with open(path, "w") as f:
         json.dump(record, f, indent=2, default=str)
     print(json.dumps({k: record[k] for k in
-                      ("pair", "iter", "change", "before", "after",
-                       "verdict", "dominant_after", "peak_gb")}, indent=2))
+                      ("pair", "iter", "change", "compression", "before",
+                       "after", "verdict", "dominant_after", "peak_gb")},
+                     indent=2))
     print(f"-> {path}")
 
 

@@ -1,0 +1,44 @@
+"""The stable public surface of the reproduction, in one import.
+
+Everything a training script, benchmark, or downstream experiment needs
+rides here::
+
+    from repro.api import CompressionConfig, sync_tree, init_feedback
+
+Three layers, one facade:
+
+- **configure** — :class:`CompressionConfig` (frozen; validates at
+  construction, ``describe()`` for log lines) and
+  :func:`~repro.core._compressors.make_compressor` for the paper's
+  standalone compressor zoo;
+- **compress** — :func:`~repro.core.api.compress_tree` (dense-layout
+  Q(g), any sharding) and :func:`~repro.core.api.compress_tree_sparse`
+  (fixed-capacity sparse buffers for the wire);
+- **synchronize** — :func:`~repro.comm.sync.sync_tree`, THE sync
+  entrypoint: wire format, exchange structure, bucket chunking, and
+  two-stage pod hierarchy all dispatch from the config. Error feedback
+  state is built by :func:`~repro.optim.optimizers.init_feedback` and
+  carried as a :class:`~repro.optim.optimizers.FeedbackState`.
+
+Names not exported here (module-private helpers like
+``repro.comm.sync._bucketed_sync``) are internal: they can change or
+disappear between releases, and CI lints non-``src/repro`` code for deep
+imports of them. ``repro.core.compressors`` is a deprecated alias of this
+surface and warns on import.
+"""
+from __future__ import annotations
+
+from repro.comm.sync import SyncStats, sync_tree
+from repro.core._compressors import REGISTRY, CompressedGrad, make_compressor
+from repro.core.api import (CompressionConfig, TreeStats, compress_leaf,
+                            compress_tree, compress_tree_sparse,
+                            zeros_like_residual)
+from repro.optim.optimizers import FeedbackState, init_feedback
+
+__all__ = [
+    "CompressionConfig", "TreeStats", "compress_leaf", "compress_tree",
+    "compress_tree_sparse", "zeros_like_residual",
+    "sync_tree", "SyncStats",
+    "FeedbackState", "init_feedback",
+    "make_compressor", "CompressedGrad", "REGISTRY",
+]

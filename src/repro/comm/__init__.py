@@ -12,13 +12,14 @@ def __getattr__(name):
     # repro.comm.compaction (and wire_layout needs repro.core.coding);
     # loading those lazily keeps the package importable from either end of
     # the chain.
+    # importlib, not `from repro.comm import ...`: the fromlist path
+    # consults this very __getattr__ before importing the submodule,
+    # which would recurse.
     if name in ("SyncStats", "sync_tree", "sync"):
-        from repro.comm import sync as _sync
+        import importlib
+        _sync = importlib.import_module("repro.comm.sync")
         return _sync if name == "sync" else getattr(_sync, name)
     if name == "wire_layout":
-        # importlib, not `from repro.comm import ...`: the fromlist path
-        # consults this very __getattr__ before importing the submodule,
-        # which would recurse.
         import importlib
         return importlib.import_module("repro.comm.wire_layout")
     raise AttributeError(f"module 'repro.comm' has no attribute {name!r}")

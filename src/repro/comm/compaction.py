@@ -35,10 +35,13 @@ def check_bucket_coords(total_coords: int, n_leaves: int) -> None:
             f"across {n_leaves} leaves, which exceeds the int32 index "
             f"limit ({INT32_COORD_LIMIT}); the concatenated offsets would "
             "wrap negative and the scatter-add would silently drop every "
-            "wrapped leaf. Chunk the tree into sub-2^31-coordinate buckets: "
-            "split the model into multiple sync_tree calls (e.g. per "
-            "parameter group), or lower min_leaf_size pressure by sharding "
-            "giant leaves over the model axis before compression.")
+            "wrapped leaf. Oversized buckets are chunked automatically "
+            "into capacity-bounded collectives (the plan-level "
+            "CompressionConfig.bucket_coord_cap knob, default 2^31-1, "
+            "see repro.core.grouping.chunk_spans), so reaching this guard "
+            "means a caller bypassed the chunker with a hand-built bucket: "
+            "lower bucket_coord_cap, or shard rows wider than the cap over "
+            "the model axis before compression.")
 
 
 def capacity_for(d: int, rho: float, slack: float = 1.25) -> int:

@@ -83,10 +83,28 @@ Exchange structure (CompressionConfig.exchange):
              construction and the companion stream is native-dtype, so
              no padding is ever moved or charged.
 
+Bucket chunking: a dtype bucket's concatenated coordinate space is capped
+at ``CompressionConfig.bucket_coord_cap`` (default: the int32 ceiling the
+scatter indices impose). When a tree's buckets would overflow it, the plan
+splits them into row-granular chunks (repro.core.grouping.chunk_spans) and
+each chunk ships as its own collective pair with offsets rebased to its own
+coordinate space — so trees of any size ride the sparse wire, and what used
+to be a trace-time ``check_bucket_coords`` abort is now just a plan decision
+(``TreePlan.chunk_count``). Every leaf's buffers are packed ONCE; chunks
+slice rows out of the packed streams, so chunked exchange stays
+byte- and bit-identical to the unchunked one.
+
 Multi-pod: with ``resparsify_pods`` the intra-pod average is re-sparsified
 before the inter-pod exchange — exactly the optional step 7 of Algorithm 1,
-mapped onto the pod axis of the mesh. Wire bytes are reported per stage
-(intra-pod vs inter-pod) as well as in total.
+mapped onto the pod axis of the mesh. The pod stage derives its RNG from the
+UNFOLDED base key (folding only non-data key axes), so every data worker of
+a pod re-sparsifies the identical pod average with the identical key and the
+pods' messages agree bit-for-bit. With error feedback the pod stage carries
+ITS OWN per-pod residual (``FeedbackState.pod_residual``, replicated across
+the pod's data workers): the second compression's error is re-injected next
+step exactly like the worker stage's, so hierarchical sync drops nothing.
+Wire bytes are reported per stage (intra-pod vs inter-pod) as well as in
+total.
 """
 from __future__ import annotations
 
@@ -99,7 +117,9 @@ import jax.numpy as jnp
 from repro.comm import compaction, wire_layout
 from repro.core.api import (CompressionConfig, compress_tree,
                             compress_tree_sparse)
+from repro.core.grouping import chunk_spans
 from repro.core.sparse import SparseGrad
+from repro.optim.optimizers import FeedbackState
 
 Axis = str | tuple[str, ...]
 
@@ -225,6 +245,30 @@ def _compaction_drops(items: list, leaves: list) -> list:
     return drops
 
 
+def _route_span(members, r0: int, n: int, d: int, seg, pieces: dict) -> None:
+    """Slice one chunk span's flat reconstruction back to leaves.
+
+    ``seg`` holds item rows ``[r0, r0 + n)`` of one group item (``n * d``
+    floats); ``members`` maps item rows to leaves. Pieces append in
+    ascending row order per leaf — chunks are emitted in row order, so the
+    per-leaf concatenation in ``_assemble_pieces`` reassembles each leaf
+    exactly, whether it arrived whole or split across chunks."""
+    m0 = 0
+    for i, rows in members:
+        a = max(m0, r0)
+        b = min(m0 + rows, r0 + n)
+        if b > a:
+            pieces.setdefault(i, []).append(seg[(a - r0) * d:(b - r0) * d])
+        m0 += rows
+
+
+def _assemble_pieces(pieces: dict, leaves: list, out: list) -> None:
+    for i, ps in pieces.items():
+        leaf = leaves[i]
+        flat = ps[0] if len(ps) == 1 else jnp.concatenate(ps)
+        out[i] = flat.reshape(leaf.shape).astype(leaf.dtype)
+
+
 def _bucketed_sync(items: list, leaves: list, axis: Axis,
                    cfg: CompressionConfig):
     """Exchange all leaves with one collective per (kind, wire-dtype) group.
@@ -252,10 +296,19 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
     backend already emitted the wire representation); codecs with a
     per-message scale gather the (tiny) scale vector alongside and decode
     locally after the collective, per (worker, leaf, layer) slot. Dense-
-    passthrough leaves share one psum. Coordinates are int32 — a single
-    bucket therefore addresses up to 2^31 coordinates (~8.6 GB of f32
-    gradient per dtype group); beyond that ``check_bucket_coords`` raises
-    at trace time with chunking advice instead of letting the offsets wrap.
+    passthrough leaves share one psum. Coordinates are int32 — one
+    collective therefore addresses up to 2^31 coordinates (~8.6 GB of f32
+    gradient per dtype group). Buckets past ``cfg.bucket_coord_cap`` are
+    CHUNKED: the greedy row-granular split of the grouping plan
+    (repro.core.grouping.chunk_spans) partitions the bucket's row blocks
+    into capacity-bounded chunks, each its own all_gather set with a
+    rebased coordinate space. Chunk boundaries fall on row (= layer)
+    boundaries, so every chunk's scatter still accumulates worker-major
+    over disjoint leaf blocks: chunked and unchunked exchanges are
+    bit-identical and charge identical wire bytes — chunking only caps
+    the coordinate space (and buffer size) of any single collective, so
+    multi-billion-parameter trees ride the sparse wire without the int32
+    guard aborting the trace.
     """
     m = _axis_size(axis)
     codec = cfg.scheme().codec
@@ -289,109 +342,121 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
                 off += n
         wire += float(flat.size * 4)
 
+    cap = min(cfg.bucket_coord_cap, compaction.INT32_COORD_LIMIT)
     for wdt, ids in sorted(sparse_groups.items(), key=lambda kv: str(kv[0])):
-        # guard the int32 coordinate space BEFORE materializing any offset
-        # as an int32 literal (a wrapped offset would corrupt silently)
-        compaction.check_bucket_coords(
-            sum((items[i][1].values.shape[0] if items[i][1].values.ndim == 2
-                 else 1) * items[i][1].d for i in ids), len(ids))
-        vals_parts, widx_parts, scale_parts, slot_parts = [], [], [], []
-        count_parts: list = []           # realized RICE words per layer
-        static_idx_words = 0             # fixed-layout index words
-        plans: list = []                 # (item id, LeafPlan, v_off, i_off,
-        coord_off = 0                    #  coord_off, c_off) — the bucket's
-        v_off = 0                        #  static self-description
-        i_off = 0
-        s_off = 0
-        c_off = 0
-        for i in ids:
-            sg = items[i][1]
+        # pack every item ONCE (chunks row-slice the shared streams), then
+        # split the bucket's row blocks into capacity-bounded chunks
+        packed: dict = {}
+        for e in ids:
+            sg = items[e][1]
             lp = wire_layout.plan(sg)
             # [L, val_len], [L, idx_len], [L] realized rice words
-            v2d, w2d, nw = wire_layout.pack(sg, lp)
-            if lp.layout == "coo":
-                # only coordinate lists get the bucket offset; bitmap/rice
-                # words are opaque bit payload and dense runs ship no index
-                w2d = (w2d + (jnp.arange(lp.layers, dtype=jnp.int32)
-                              * lp.d)[:, None] + jnp.int32(coord_off))
-            if lp.idx_len:
-                widx_parts.append(w2d.reshape(-1))
-            if lp.layout == "rice":
-                count_parts.append(nw.reshape(-1))
-            else:
-                static_idx_words += lp.layers * lp.idx_len
-            vals_parts.append(v2d.reshape(-1))
-            if codec.has_scale:
-                slot_parts.append(
-                    jnp.repeat(jnp.arange(lp.layers, dtype=jnp.int32),
-                               lp.val_len) + jnp.int32(s_off))
-                scale_parts.append(jnp.asarray(sg.scale, jnp.float32)
-                                   .reshape(-1))
-            plans.append((i, lp, v_off, i_off, coord_off, c_off))
-            v_off += lp.layers * lp.val_len
-            i_off += lp.layers * lp.idx_len
-            coord_off += lp.block
-            s_off += lp.layers
-            c_off += lp.layers if lp.layout == "rice" else 0
+            packed[e] = (lp,) + wire_layout.pack(sg, lp) + (
+                jnp.asarray(sg.scale, jnp.float32).reshape(-1)
+                if codec.has_scale else None,)
             overflow = overflow + jnp.sum(sg.overflow())
-        if count_parts:
-            # phase one of the two-phase exchange: the per-layer encoded
-            # word counts of every RICE stream in this bucket. A real
-            # ragged collective sizes its receives from exactly this
-            # vector; the static-shape emulation below uses it to zero
-            # payload padding pre-decode and to price realized bytes.
-            counts_flat = jnp.concatenate(count_parts)           # [R]
-            gcounts = jax.lax.all_gather(counts_flat, axis,
-                                         tiled=False)            # [m, R]
-            wire += float(counts_flat.size * 4)                  # the vector
-            wire = wire + 4.0 * jnp.sum(counts_flat).astype(jnp.float32)
-        else:
-            gcounts = None
-        vals_flat = jnp.concatenate(vals_parts)
-        gvals = jax.lax.all_gather(vals_flat, axis, tiled=False)  # [m, V]
-        if widx_parts:
-            # phase two: the index/word payload at its static shape — for
-            # RICE segments only the true encoded words (charged above)
-            # are protocol bytes, the rest is zero padding
-            widx_flat = jnp.concatenate(widx_parts)
-            gwidx = jax.lax.all_gather(widx_flat, axis, tiled=False)  # [m, I]
-            wire += float(static_idx_words * 4)
-        else:
-            gwidx = None                 # every leaf elided its index stream
-        if codec.has_scale:
-            # per-message scales ride a third (tiny: one f32 per leaf/layer)
-            # all_gather; each slot decodes with its own worker's scale.
-            scales_flat = jnp.concatenate(scale_parts)           # [S]
-            slot_map = jnp.concatenate(slot_parts)               # [V]
-            gscales = jax.lax.all_gather(scales_flat, axis,
-                                         tiled=False)            # [m, S]
-            decoded = codec.decode(gvals, gscales[:, slot_map])
-            wire += float(scales_flat.size * 4)
-        else:
-            decoded = gvals.astype(jnp.float32)
-        upd_parts, coord_parts = [], []
-        for (i, lp, v0, i0, c0, cc0) in plans:
-            dv = decoded[:, v0:v0 + lp.layers * lp.val_len]
-            wseg = (gwidx[:, i0:i0 + lp.layers * lp.idx_len]
-                    if lp.idx_len else None)
-            wcnt = (gcounts[:, cc0:cc0 + lp.layers]
-                    if lp.layout == "rice" else None)
-            upd, crd = wire_layout.unpack_gathered(lp, dv, wseg, c0,
-                                                   wcounts=wcnt)
-            upd_parts.append(upd)
-            coord_parts.append(crd)
-        dense = jnp.zeros((coord_off,), jnp.float32)
-        dense = dense.at[jnp.concatenate(coord_parts, axis=1).reshape(-1)].add(
-            jnp.concatenate(upd_parts, axis=1).reshape(-1), mode="drop") / m
-        for (e, lp, _, _, c0, _) in plans:
-            seg = dense[c0:c0 + lp.block]
-            r0 = 0
-            for i, rows in items[e][2]:
-                leaf = leaves[i]
-                out[i] = (seg[r0 * lp.d:(r0 + rows) * lp.d]
-                          .reshape(leaf.shape).astype(leaf.dtype))
-                r0 += rows
-        wire += float(vals_flat.size) * wdt.itemsize
+        chunks = chunk_spans([(e, packed[e][0].layers, packed[e][0].d)
+                              for e in ids], cap)
+        pieces: dict = {}                # leaf id -> flat row-order pieces
+        for chunk in chunks:
+            vals_parts, widx_parts, scale_parts, slot_parts = [], [], [], []
+            count_parts: list = []       # realized RICE words per layer
+            static_idx_words = 0         # fixed-layout index words
+            plans: list = []             # (item id, span LeafPlan, span r0,
+            coord_off = 0                #  v_off, i_off, coord_off, c_off) —
+            v_off = 0                    #  the chunk's static
+            i_off = 0                    #  self-description
+            s_off = 0
+            c_off = 0
+            for e, r0, n in chunk:
+                lp0, v2d, w2d, nw, sflat = packed[e]
+                lp = dataclasses.replace(lp0, layers=n)
+                w2 = w2d[r0:r0 + n]
+                if lp.layout == "coo":
+                    # only coordinate lists get the chunk offset (rebased
+                    # per chunk); bitmap/rice words are opaque bit payload
+                    # and dense runs ship no index
+                    w2 = (w2 + (jnp.arange(n, dtype=jnp.int32)
+                                * lp.d)[:, None] + jnp.int32(coord_off))
+                if lp.idx_len:
+                    widx_parts.append(w2.reshape(-1))
+                if lp.layout == "rice":
+                    count_parts.append(nw[r0:r0 + n])
+                else:
+                    static_idx_words += n * lp.idx_len
+                vals_parts.append(v2d[r0:r0 + n].reshape(-1))
+                if codec.has_scale:
+                    slot_parts.append(
+                        jnp.repeat(jnp.arange(n, dtype=jnp.int32),
+                                   lp.val_len) + jnp.int32(s_off))
+                    scale_parts.append(sflat[r0:r0 + n])
+                plans.append((e, lp, r0, v_off, i_off, coord_off, c_off))
+                v_off += n * lp.val_len
+                i_off += n * lp.idx_len
+                coord_off += lp.block
+                s_off += n
+                c_off += n if lp.layout == "rice" else 0
+            # the chunker bounded this by construction; a trip here means a
+            # caller fed spans wider than the cap past it
+            compaction.check_bucket_coords(coord_off, len(chunk))
+            if count_parts:
+                # phase one of the two-phase exchange: the per-layer encoded
+                # word counts of every RICE stream in this chunk. A real
+                # ragged collective sizes its receives from exactly this
+                # vector; the static-shape emulation below uses it to zero
+                # payload padding pre-decode and to price realized bytes.
+                counts_flat = jnp.concatenate(count_parts)       # [R]
+                gcounts = jax.lax.all_gather(counts_flat, axis,
+                                             tiled=False)        # [m, R]
+                wire += float(counts_flat.size * 4)              # the vector
+                wire = wire + 4.0 * jnp.sum(counts_flat).astype(jnp.float32)
+            else:
+                gcounts = None
+            vals_flat = jnp.concatenate(vals_parts)
+            gvals = jax.lax.all_gather(vals_flat, axis, tiled=False)  # [m, V]
+            if widx_parts:
+                # phase two: the index/word payload at its static shape —
+                # for RICE segments only the true encoded words (charged
+                # above) are protocol bytes, the rest is zero padding
+                widx_flat = jnp.concatenate(widx_parts)
+                gwidx = jax.lax.all_gather(widx_flat, axis,
+                                           tiled=False)           # [m, I]
+                wire += float(static_idx_words * 4)
+            else:
+                gwidx = None             # every leaf elided its index stream
+            if codec.has_scale:
+                # per-message scales ride a third (tiny: one f32 per
+                # leaf/layer) all_gather; each slot decodes with its own
+                # worker's scale.
+                scales_flat = jnp.concatenate(scale_parts)       # [S]
+                slot_map = jnp.concatenate(slot_parts)           # [V]
+                gscales = jax.lax.all_gather(scales_flat, axis,
+                                             tiled=False)        # [m, S]
+                decoded = codec.decode(gvals, gscales[:, slot_map])
+                wire += float(scales_flat.size * 4)
+            else:
+                decoded = gvals.astype(jnp.float32)
+            upd_parts, coord_parts = [], []
+            for (e, lp, r0, v0, i0, c0, cc0) in plans:
+                dv = decoded[:, v0:v0 + lp.layers * lp.val_len]
+                wseg = (gwidx[:, i0:i0 + lp.layers * lp.idx_len]
+                        if lp.idx_len else None)
+                wcnt = (gcounts[:, cc0:cc0 + lp.layers]
+                        if lp.layout == "rice" else None)
+                upd, crd = wire_layout.unpack_gathered(lp, dv, wseg, c0,
+                                                       wcounts=wcnt)
+                upd_parts.append(upd)
+                coord_parts.append(crd)
+            dense = jnp.zeros((coord_off,), jnp.float32)
+            dense = dense.at[
+                jnp.concatenate(coord_parts, axis=1).reshape(-1)].add(
+                jnp.concatenate(upd_parts, axis=1).reshape(-1),
+                mode="drop") / m
+            for (e, lp, r0, _, _, c0, _) in plans:
+                _route_span(items[e][2], r0, lp.layers, lp.d,
+                            dense[c0:c0 + lp.block], pieces)
+            wire += float(v_off) * wdt.itemsize
+        _assemble_pieces(pieces, leaves, out)
 
     return out, wire, overflow
 
@@ -431,11 +496,15 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
     different collective structure (see the module docstring).
 
     Sparse entries (shape groups since the grouped compression plan — each
-    covers every leaf of one (dtype, d, k_cap) bucket and is an atomic
-    unit here) are walked in reverse order and greedily packed into
-    buckets of at most ``cfg.overlap_bucket_bytes`` payload (a single
-    entry always fits — its stream is never split). Each bucket's entry
-    streams concatenate into ONE int32 all_gather:
+    covers every leaf of one (dtype, d, k_cap) bucket) are walked in
+    reverse order, split into capacity-bounded row spans where their
+    coordinate block exceeds ``cfg.bucket_coord_cap`` (the same
+    row-granular rule as the sync barrier's chunked buckets —
+    repro.core.grouping.chunk_spans; a span is the atomic unit and is
+    never split), and greedily packed into buckets of at most
+    ``cfg.overlap_bucket_bytes`` payload AND ``bucket_coord_cap``
+    coordinates. Each bucket's entry streams concatenate into ONE int32
+    all_gather:
 
         entry stream = [counts (rice, layers words)]
                       [index words (layers*idx_len; coo pre-offset by
@@ -473,19 +542,28 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
 
     # --- pack + issue, reverse-backward order ---------------------------
     # buckets: list of (segs, stream, vstream|None) where segs =
-    # [(item id, LeafPlan, word offset, fused value word count, wire
-    #   dtype, companion-stream element offset)] — vwords > 0 means the
-    # values are bitcast into the word stream (4-byte dtypes), velems0
-    # >= 0 means they ride the companion native-dtype stream.
+    # [(item id, span LeafPlan, span row start, word offset, fused value
+    #   word count, wire dtype, companion-stream element offset)] —
+    # vwords > 0 means the values are bitcast into the word stream
+    # (4-byte dtypes), velems0 >= 0 means they ride the companion
+    # native-dtype stream. The atomic unit is one capacity-bounded row
+    # SPAN of an item (repro.core.grouping.chunk_spans): items whose
+    # coordinate block exceeds ``cfg.bucket_coord_cap`` split across
+    # buckets instead of aborting the trace, and a bucket flushes when
+    # EITHER the byte cap or the coordinate cap would overflow (the byte
+    # cap alone does not bound the coordinate space — e.g. RICE at 1%
+    # density packs ~100x more coordinates than bytes).
     buckets: list = []
     cur_parts: list = []
     cur_vparts: list = []
     cur_segs: list = []
-    cur_words = cur_velems = 0
+    cur_words = cur_velems = cur_coords = 0
     cap_bytes = max(4, cfg.overlap_bucket_bytes)
+    cap = min(cfg.bucket_coord_cap, compaction.INT32_COORD_LIMIT)
 
     def flush():
-        nonlocal cur_parts, cur_vparts, cur_segs, cur_words, cur_velems
+        nonlocal cur_parts, cur_vparts, cur_segs
+        nonlocal cur_words, cur_velems, cur_coords
         if cur_segs:
             stream = (cur_parts[0] if len(cur_parts) == 1
                       else jnp.concatenate(cur_parts))
@@ -495,52 +573,59 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
                            else jnp.concatenate(cur_vparts))
             buckets.append((cur_segs, stream, vstream))
         cur_parts, cur_vparts, cur_segs = [], [], []
-        cur_words = cur_velems = 0
+        cur_words = cur_velems = cur_coords = 0
 
     for i in reversed(sparse_ids):
         sg = items[i][1]
-        lp = wire_layout.plan(sg)
-        # per-leaf blocks: the int32 guard is per leaf, not per bucket
-        compaction.check_bucket_coords(lp.block, 1)
+        lp0 = wire_layout.plan(sg)
         wdt = jnp.dtype(sg.values.dtype)
-        v2d, w2d, nw = wire_layout.pack(sg, lp)
-        parts = []
-        if lp.layout == "rice":
-            parts.append(nw.reshape(-1))                       # counts header
-            wire += float(lp.layers * 4)
-            wire = wire + 4.0 * jnp.sum(nw).astype(jnp.float32)
-        else:
-            wire += float(lp.layers * lp.idx_len * 4)
-        if lp.idx_len:
-            if lp.layout == "coo":
-                # layer strides only: coordinates are leaf-block-local
-                w2d = w2d + (jnp.arange(lp.layers, dtype=jnp.int32)
-                             * lp.d)[:, None]
-            parts.append(w2d.reshape(-1))
-        n_vals = lp.layers * lp.val_len
-        if wdt.itemsize == 4:
-            vwords, velems0 = _words_of(n_vals, wdt), -1
-            parts.append(_word_pack(v2d))
-        else:
-            vwords, velems0 = 0, cur_velems
-        wire += float(n_vals) * wdt.itemsize
-        if codec.has_scale:
-            parts.append(_word_pack(jnp.asarray(sg.scale, jnp.float32)
-                                    .reshape(-1)))
-            wire += float(lp.layers * 4)
+        v2d_full, w2d_full, nw_full = wire_layout.pack(sg, lp0)
         overflow = overflow + jnp.sum(sg.overflow())
-        n_words = sum(p.shape[0] for p in parts)
-        n_bytes = n_words * 4 + (0 if vwords else n_vals * wdt.itemsize)
-        if (cur_words or cur_velems) and \
-                cur_words * 4 + cur_velems * wdt.itemsize + n_bytes > cap_bytes:
-            flush()
-            velems0 = min(velems0, 0)                  # offset in new bucket
-        cur_segs.append((i, lp, cur_words, vwords, wdt, velems0))
-        cur_parts.extend(parts)
-        cur_words += n_words
-        if not vwords:
-            cur_vparts.append(v2d.reshape(-1))
-            cur_velems += n_vals
+        for (_, r0, n) in (s for c in chunk_spans([(i, lp0.layers, lp0.d)],
+                                                  cap) for s in c):
+            lp = dataclasses.replace(lp0, layers=n)
+            w2d = w2d_full[r0:r0 + n]
+            v2d = v2d_full[r0:r0 + n]
+            parts = []
+            if lp.layout == "rice":
+                nw = nw_full[r0:r0 + n]
+                parts.append(nw.reshape(-1))                   # counts header
+                wire += float(n * 4)
+                wire = wire + 4.0 * jnp.sum(nw).astype(jnp.float32)
+            else:
+                wire += float(n * lp.idx_len * 4)
+            if lp.idx_len:
+                if lp.layout == "coo":
+                    # layer strides only: coordinates are span-block-local
+                    w2d = w2d + (jnp.arange(n, dtype=jnp.int32)
+                                 * lp.d)[:, None]
+                parts.append(w2d.reshape(-1))
+            n_vals = n * lp.val_len
+            if wdt.itemsize == 4:
+                vwords, velems0 = _words_of(n_vals, wdt), -1
+                parts.append(_word_pack(v2d))
+            else:
+                vwords, velems0 = 0, cur_velems
+            wire += float(n_vals) * wdt.itemsize
+            if codec.has_scale:
+                parts.append(_word_pack(
+                    jnp.asarray(sg.scale, jnp.float32).reshape(-1)[r0:r0 + n]))
+                wire += float(n * 4)
+            n_words = sum(p.shape[0] for p in parts)
+            n_bytes = n_words * 4 + (0 if vwords else n_vals * wdt.itemsize)
+            if (cur_words or cur_velems) and \
+                    (cur_words * 4 + cur_velems * wdt.itemsize + n_bytes
+                     > cap_bytes
+                     or cur_coords + lp.block > cap):
+                flush()
+                velems0 = min(velems0, 0)              # offset in new bucket
+            cur_segs.append((i, lp, r0, cur_words, vwords, wdt, velems0))
+            cur_parts.extend(parts)
+            cur_words += n_words
+            cur_coords += lp.block
+            if not vwords:
+                cur_vparts.append(v2d.reshape(-1))
+                cur_velems += n_vals
     flush()
 
     pending = [(segs, jax.lax.all_gather(stream, axis, tiled=False),
@@ -570,6 +655,7 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
     # per-leaf formulation while running one scatter instead of
     # len(segs). Wire index words stay leaf-block-local (the documented
     # format); the bucket-local block offset is applied at decode.
+    pieces: dict = {}                    # leaf id -> flat row-order pieces
     for segs, gs, gv in pending:
         compaction.check_bucket_coords(sum(s[1].block for s in segs),
                                        len(segs))
@@ -580,7 +666,7 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
         # casts of sub-word dtypes cost XLA CPU a pass per leaf
         gvf = (gv.astype(jnp.float32)
                if gv is not None and not codec.has_scale else None)
-        for (i, lp, w0, vwords, wdt, velems0) in segs:
+        for (i, lp, r0, w0, vwords, wdt, velems0) in segs:
             pos = w0
             wcnt = wseg = None
             if lp.layout == "rice":
@@ -610,7 +696,7 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
             upd, crd = wire_layout.unpack_gathered(lp, decoded, wseg,
                                                    block_off, wcounts=wcnt)
             if lp.layout == "coo":
-                # coo coords come straight off the wire (leaf-local)
+                # coo coords come straight off the wire (span-local)
                 crd = crd + jnp.int32(block_off)
             upd_parts.append(upd)
             coord_parts.append(crd)
@@ -620,15 +706,11 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
             jnp.concatenate(coord_parts, axis=1).reshape(-1)].add(
             jnp.concatenate(upd_parts, axis=1).reshape(-1), mode="drop") / m
         off = 0
-        for (e, lp, _, _, _, _) in segs:
-            seg = dense[off:off + lp.block]
-            r0 = 0
-            for i, rows in items[e][2]:
-                leaf = leaves[i]
-                out[i] = (seg[r0 * lp.d:(r0 + rows) * lp.d]
-                          .reshape(leaf.shape).astype(leaf.dtype))
-                r0 += rows
+        for (e, lp, r0, _, _, _, _) in segs:
+            _route_span(items[e][2], r0, lp.layers, lp.d,
+                        dense[off:off + lp.block], pieces)
             off += lp.block
+    _assemble_pieces(pieces, leaves, out)
 
     return out, wire, overflow
 
@@ -637,45 +719,101 @@ def _exchange_fn(cfg: CompressionConfig):
     return _overlapped_sync if cfg.exchange == "overlap" else _bucketed_sync
 
 
+def _pod_key(key: jax.Array, key_axes: tuple[str, ...],
+             data_axes: tuple[str, ...]) -> jax.Array:
+    """Pod-stage RNG, folded from the UNFOLDED base key so it is invariant
+    over the data axes: every data worker of a pod re-sparsifies the
+    identical pod-averaged tree with the identical key (and therefore
+    agrees bit-for-bit on the pod's message and residual), while distinct
+    pods / model shards stay independent via the non-data axes."""
+    key = jax.random.fold_in(key, 7)
+    for a in key_axes:
+        if a not in data_axes:
+            key = jax.random.fold_in(key, jax.lax.axis_index(a))
+    return key
+
+
 def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
               data_axis: Axis = "data", pod_axis: str | None = None,
               stacked: Any | None = None,
-              fold_worker_key: bool = True,
-              residual: Any | None = None) -> tuple[Any, Any, SyncStats]:
-    """Compress local grads per leaf, exchange over data (and pod) axes.
+              key_axes: tuple[str, ...] | None = None,
+              feedback: Any | None = None
+              ) -> tuple[Any, FeedbackState | None, SyncStats]:
+    """THE sync entrypoint: compress local grads per leaf and exchange them
+    over the data (and pod) mesh axes, dispatching wire format, exchange
+    structure, bucket chunking, and hierarchy from ``cfg`` alone.
 
-    Returns ``(synced, new_residual, stats)``: the synchronized (averaged)
-    gradient tree, the updated per-worker error-feedback residual (None
-    unless ``cfg.error_feedback``), and SyncStats. Must be called where
-    ``data_axis`` (and ``pod_axis``) are manual shard_map axes.
+    Returns ``(synced, new_feedback, stats)``: the synchronized (averaged)
+    gradient tree, the updated error-feedback state (a ``FeedbackState``;
+    None unless ``cfg.error_feedback``), and SyncStats. Must be called
+    where ``data_axis`` (and ``pod_axis``) are manual shard_map axes.
     ``stacked`` marks scan-over-layers leaves (compressed per layer).
-    ``fold_worker_key=False`` when the caller already folded worker indices
-    (e.g. from an enclosing shard_map region where axis_index is available).
 
-    With ``cfg.error_feedback`` the caller MUST pass this worker's carried
-    ``residual`` tree (raises otherwise — the flag is never a silent no-op):
-    it is added to the gradients before compression and the new compression
-    error comes back for the caller to carry into the next step.
+    ``key_axes`` names the mesh axes whose indices fold into ``key`` for
+    per-worker RNG independence. The default (None) folds the data axes
+    then the pod axis — one independent stream per worker. Pass a custom
+    tuple when more axes are manual at the call site (e.g. the train
+    step's shard-local sync folds the model axis too); pass ``()`` only
+    for a pre-folded key AND no pod-stage re-sparsification — the
+    pod stage derives its data-axis-invariant key from the unfolded base
+    key, so it needs the fold to happen here.
+
+    With ``cfg.error_feedback`` the caller MUST pass ``feedback`` — a
+    ``FeedbackState`` (or a bare per-worker residual tree) — and raises
+    otherwise; the flag is never a silent no-op. The worker residual is
+    added to the gradients before compression and the new compression
+    error comes back in ``new_feedback.residual``. With
+    ``cfg.resparsify_pods`` and a pod axis the pod stage carries ITS OWN
+    residual (``FeedbackState.pod_residual``, per-pod, identical across
+    the pod's data workers — see ``init_feedback(num_pods=...)``): the
+    intra-pod average plus the carried pod residual is re-sparsified, the
+    second compression's error comes back in ``new_feedback.pod_residual``,
+    and nothing is silently dropped at either stage.
     """
+    data_axes = ((data_axis,) if isinstance(data_axis, str)
+                 else tuple(data_axis))
+    if key_axes is None:
+        key_axes = data_axes + ((pod_axis,) if pod_axis is not None else ())
+    else:
+        key_axes = tuple(key_axes)
+
+    if isinstance(feedback, FeedbackState):
+        residual, pod_residual = feedback.residual, feedback.pod_residual
+    else:
+        residual, pod_residual = feedback, None
+
     if cfg.error_feedback and residual is None:
         raise ValueError(
             "sync_tree: error_feedback=True requires the per-worker residual "
-            "tree (carry a FeedbackState through the train step); refusing "
-            "to silently drop the compression error.")
-    axes = (data_axis,) if isinstance(data_axis, str) else tuple(data_axis)
-    if pod_axis is not None:
-        axes = axes + (pod_axis,)
-    if fold_worker_key:
-        key = _worker_key(key, axes)
+            "tree (pass feedback=FeedbackState(...), carried through the "
+            "train step); refusing to silently drop the compression error.")
+    resparsify_pod_stage = cfg.resparsify_pods and pod_axis is not None
+    if resparsify_pod_stage and cfg.error_feedback and pod_residual is None:
+        raise ValueError(
+            "sync_tree: error_feedback=True with resparsify_pods=True and a "
+            "pod axis requires the per-pod residual tree too "
+            "(feedback=FeedbackState(residual=..., pod_residual=...); build "
+            "one with repro.optim.optimizers.init_feedback(num_pods=...)): "
+            "the pod-stage re-sparsification error must be carried, not "
+            "dropped.")
+    if resparsify_pod_stage and not key_axes:
+        raise ValueError(
+            "sync_tree: resparsify_pods with a pod axis needs key_axes (the "
+            "mesh axes to fold into the per-worker key) so the pod stage can "
+            "derive a data-axis-invariant key from the unfolded base key; "
+            "pass key_axes instead of pre-folding the key.")
+
+    worker_key = _worker_key(key, key_axes)
 
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     stk_leaves = (jax.tree_util.tree_flatten(stacked)[0]
                   if stacked is not None else [False] * len(leaves))
     overflow = jnp.asarray(0, jnp.int32)
+    new_pod_res = pod_residual        # pass-through unless the pod stage runs
 
     wire_inter = 0.0
     if cfg.wire == "dense":
-        q_tree, new_res, stats = compress_tree(cfg, key, grads,
+        q_tree, new_res, stats = compress_tree(cfg, worker_key, grads,
                                                residual=residual,
                                                stacked=stacked)
         synced, wire_intra = _sync_leaves_dense(q_tree, data_axis)
@@ -684,7 +822,8 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
             # split stays honest: intra = data-axis stage, inter = pod stage
             synced, wire_inter = _sync_leaves_dense(synced, pod_axis)
     else:   # gather | packed (validated at CompressionConfig construction)
-        items, new_res, _, stats = compress_tree_sparse(cfg, key, grads,
+        items, new_res, _, stats = compress_tree_sparse(cfg, worker_key,
+                                                        grads,
                                                         stacked=stacked,
                                                         residual=residual)
         out_leaves, wire_intra, overflow = _exchange_fn(cfg)(items, leaves,
@@ -692,22 +831,34 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
         synced = jax.tree_util.tree_unflatten(treedef, out_leaves)
 
     # Algorithm 1 step 7 (optional re-sparsification) -> inter-pod stage.
-    # (error_feedback + resparsify_pods is rejected at config validation:
-    # the pod-stage recompression error below is not carried anywhere.)
+    # With error feedback the recompression error is carried in the
+    # per-pod residual (identical across the pod's data workers: the
+    # input, key, and carried state all are), never dropped.
     if pod_axis is not None and (cfg.resparsify_pods or cfg.wire != "dense"):
         if cfg.wire == "dense":
             # only reachable with resparsify_pods: the plain dense pod
             # stage already ran in the intra/inter split above
-            pod_key = jax.random.fold_in(key, 7)
-            synced, _, _ = compress_tree(cfg, pod_key, synced,
-                                         stacked=stacked)
+            pod_key = _pod_key(key, key_axes, data_axes)
+            if cfg.error_feedback:
+                synced, new_pod_res, _ = compress_tree(
+                    cfg, pod_key, synced, stacked=stacked,
+                    residual=pod_residual)
+            else:
+                synced, _, _ = compress_tree(cfg, pod_key, synced,
+                                             stacked=stacked)
             synced, wire_inter = _sync_leaves_dense(synced, pod_axis)
         else:
             synced_leaves = jax.tree_util.tree_flatten(synced)[0]
             if cfg.resparsify_pods:
-                pod_key = jax.random.fold_in(key, 7)
-                items2, _, _, _ = compress_tree_sparse(cfg, pod_key, synced,
-                                                       stacked=stacked)
+                pod_key = _pod_key(key, key_axes, data_axes)
+                if cfg.error_feedback:
+                    items2, new_pod_res, _, _ = compress_tree_sparse(
+                        cfg, pod_key, synced, stacked=stacked,
+                        residual=pod_residual)
+                else:
+                    items2, _, _, _ = compress_tree_sparse(cfg, pod_key,
+                                                           synced,
+                                                           stacked=stacked)
             else:
                 items2 = _compact_items(cfg, synced_leaves, stk_leaves)
                 if cfg.error_feedback:
@@ -727,7 +878,9 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
             synced = jax.tree_util.tree_unflatten(treedef, out_leaves)
             overflow = overflow + ovf2
 
-    return synced, new_res, SyncStats(
+    new_feedback = (FeedbackState(residual=new_res, pod_residual=new_pod_res)
+                    if cfg.error_feedback else None)
+    return synced, new_feedback, SyncStats(
         bits=stats.bits, dense_bits=stats.dense_bits,
         wire_bytes=jnp.asarray(wire_intra + wire_inter, jnp.float32),
         wire_bytes_intra=jnp.asarray(wire_intra, jnp.float32),

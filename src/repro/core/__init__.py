@@ -3,7 +3,7 @@ optimal sampling probabilities, coding model, and the compressor zoo."""
 from repro.core.api import (CompressionConfig, TreeStats, compress_leaf,
                             compress_tree, compress_tree_sparse,
                             zeros_like_residual)
-from repro.core.compressors import REGISTRY, CompressedGrad, make_compressor
+from repro.core._compressors import REGISTRY, CompressedGrad, make_compressor
 from repro.core.schemes import Scheme, make_scheme, parse_composition
 from repro.core.sparse import (Backend, PallasBackend, ReferenceBackend,
                                SparseGrad, resolve_backend)

@@ -1,0 +1,138 @@
+"""Gradient compressor zoo — thin registry aliases over the composable
+selector ∘ codec protocol (repro.core.schemes / repro.core.codecs).
+
+The paper's method ("gspar", Algorithms 2/3) plus every baseline it compares
+against or cites: uniform sampling (UniSp), QSGD [Alistarh et al.], TernGrad
+[Wen et al.], deterministic top-k (biased; used with error feedback), and the
+identity. Each compressor maps (key, g) -> CompressedGrad with the sparsified
+(still-dense-layout) gradient, the probability vector used, and message-size
+accounting. All are shape-static and jit-safe.
+
+Since the composable-compression refactor each name here is a two-stage
+composition: gspar/unisp/topk are their selector with the float codec,
+``qsgd`` is identity ∘ qsgd<bits>, ``terngrad`` is bernoulli ∘ ternary. Any
+other composition (e.g. the Qsparse-style ``gspar+qsgd8``) is reachable via
+``make_compressor("gspar", codec="qsgd8", ...)`` or directly through
+``repro.core.schemes.make_scheme``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schemes
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressedGrad:
+    """A compressed gradient in dense layout plus accounting metadata."""
+    q: jax.Array            # unbiased (or biased, for topk) estimate of g
+    p: jax.Array            # probability vector used (ones for dense schemes)
+    bits: jax.Array         # realized message bits under the scheme's wire format
+    var_ratio: jax.Array    # ||q||^2 / ||g||^2 (the paper's reported `var`)
+
+
+def finish_compressed(g, q, p, bits) -> CompressedGrad:
+    g32 = g.astype(jnp.float32).reshape(-1)
+    q32 = q.astype(jnp.float32).reshape(-1)
+    den = jnp.sum(g32 * g32)
+    var_ratio = jnp.where(den > 0, jnp.sum(q32 * q32) / jnp.where(den > 0, den, 1.0), 0.0)
+    return CompressedGrad(q=q, p=p, bits=jnp.asarray(bits, jnp.float32),
+                          var_ratio=var_ratio)
+
+
+def _compose(key, g, *, selector: str, codec: str | None = None, **kw):
+    return schemes.make_scheme(selector, codec=codec, **kw).compress(key, g)
+
+
+# ---------------------------------------------------------------------------
+# The paper's method
+# ---------------------------------------------------------------------------
+
+def gspar(key, g, *, eps: float = 1.0, algo: str = "greedy", rho: float = 0.1,
+          num_iters: int = 2, b: int = 32,
+          codec: str | None = None) -> CompressedGrad:
+    """Wangni et al. unbiased sparsification with optimal probabilities.
+
+    algo="closed": Algorithm 2 with variance budget (1+eps).
+    algo="greedy": Algorithm 3 with target density rho (paper default, 2 iters).
+    """
+    return _compose(key, g, selector="gspar", codec=codec, eps=eps, algo=algo,
+                    rho=rho, num_iters=num_iters, float_bits=b)
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def unisp(key, g, *, rho: float = 0.1, b: int = 32,
+          codec: str | None = None) -> CompressedGrad:
+    """Uniform sampling baseline: p_i = rho everywhere (unbiased)."""
+    return _compose(key, g, selector="unisp", codec=codec, rho=rho,
+                    float_bits=b)
+
+
+def topk(key, g, *, rho: float = 0.1, b: int = 32,
+         codec: str | None = None) -> CompressedGrad:
+    """Deterministic top-k by magnitude. BIASED -- pair with error feedback.
+
+    Selection is by ``top_k`` *indices* with a strict k cut, not by a
+    magnitude threshold (which over-selects on magnitude ties at the k-th
+    value and marks p = 1 on exactly-zero coordinates)."""
+    return _compose(key, g, selector="topk", codec=codec, rho=rho,
+                    float_bits=b)
+
+
+def qsgd(key, g, *, bits: int = 4) -> CompressedGrad:
+    """QSGD [Alistarh et al. 2017]: identity selection composed with unbiased
+    stochastic quantization to s = 2^bits - 1 levels of |g_i| / ||g||_2."""
+    return _compose(key, g, selector="qsgd", qsgd_bits=bits)
+
+
+def terngrad(key, g, *, b: int = 32) -> CompressedGrad:
+    """TernGrad [Wen et al. 2017]: Bernoulli(|g_i|/max|g|) selection composed
+    with the ternary codec — Q_i = max|g| * sign(g_i) * Z_i."""
+    return _compose(key, g, selector="terngrad", float_bits=b)
+
+
+def identity(key, g, *, b: int = 32) -> CompressedGrad:
+    """No compression ("baseline" in the paper's figures)."""
+    return _compose(key, g, selector="none", float_bits=b)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+REGISTRY: dict[str, Callable] = {
+    "gspar": gspar,
+    "unisp": unisp,
+    "topk": topk,
+    "qsgd": qsgd,
+    "terngrad": terngrad,
+    "none": identity,
+}
+
+
+def _generic(key, g, *, name: str, rho: float = 0.1, eps: float = 1.0,
+             algo: str = "greedy", num_iters: int = 2, b: int = 32,
+             bits: int = 4, codec: str | None = None) -> CompressedGrad:
+    return _compose(key, g, selector=name, codec=codec, rho=rho, eps=eps,
+                    algo=algo, num_iters=num_iters, qsgd_bits=bits,
+                    float_bits=b)
+
+
+def make_compressor(name: str, **kwargs) -> Callable:
+    """Return a (key, g) -> CompressedGrad callable with options bound.
+
+    ``name`` may be a registry key or a selector+codec composition string
+    (e.g. ``"gspar+qsgd8"``, ``"unisp+bf16"``, ``"bernoulli+ternary"``)."""
+    if name in REGISTRY:
+        return partial(REGISTRY[name], **kwargs)
+    schemes.parse_composition(name)                # raises on unknown names
+    return partial(_generic, name=name, **kwargs)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import coding
 from repro.core import schemes as schemes_lib
-from repro.core.compressors import CompressedGrad, make_compressor
+from repro.core._compressors import CompressedGrad, make_compressor
 from repro.core.grouping import plan_tree
 
 
@@ -100,34 +100,45 @@ class CompressionConfig:
     resparsify_pods: bool = False    # Alg.1 step 7 -> hierarchical pod-level resync
     exchange: str = "sync"           # sync | overlap — sparse collective structure
     overlap_bucket_bytes: int = 1 << 20  # payload cap per overlapped bucket
+    bucket_coord_cap: int = 2**31 - 1    # coords per sparse wire chunk: buckets
+                                     # past this split into multiple collectives
+                                     # (plan-level chunking, repro.core.grouping.
+                                     # chunk_spans); the default is the int32
+                                     # scatter-index ceiling
     xla_preset: str = "none"         # XLA comm-tuning preset (repro.comm.xla_flags)
 
     def __post_init__(self):
         if self.wire not in ("dense", "gather", "packed"):
-            raise ValueError(f"unknown wire format {self.wire!r}; "
-                             "have ('dense', 'gather', 'packed')")
+            raise ValueError(f"unknown wire format {self.wire!r} "
+                             "(valid: 'dense', 'gather', 'packed')")
         if self.exchange not in ("sync", "overlap"):
-            raise ValueError(f"unknown exchange mode {self.exchange!r}; "
-                             "have ('sync', 'overlap')")
+            raise ValueError(f"unknown exchange mode {self.exchange!r} "
+                             "(valid: 'sync', 'overlap')")
         if self.overlap_bucket_bytes < 4:
             raise ValueError(
                 f"overlap_bucket_bytes={self.overlap_bucket_bytes} is below "
                 "one int32 word; the overlapped exchange cannot ship a "
-                "zero-byte bucket")
+                "zero-byte bucket (valid: any int >= 4)")
+        if not 1 <= self.bucket_coord_cap <= 2**31 - 1:
+            raise ValueError(
+                f"bucket_coord_cap={self.bucket_coord_cap} is outside the "
+                f"int32 coordinate space (valid: 1 <= cap <= {2**31 - 1}); "
+                "sparse wire chunks scatter with int32 coordinates, so a "
+                "chunk can never span more")
         from repro.comm.xla_flags import PRESETS   # leaf module, no cycle
         if self.xla_preset not in PRESETS:
-            raise ValueError(f"unknown xla_preset {self.xla_preset!r}; "
-                             f"have {tuple(sorted(PRESETS))}")
+            raise ValueError(f"unknown xla_preset {self.xla_preset!r} "
+                             f"(valid: {tuple(sorted(PRESETS))})")
         if self.wire_layout not in ("auto", "coo", "bitmap", "dense",
                                     "rice"):
-            raise ValueError(f"unknown wire layout {self.wire_layout!r}; "
-                             "have ('auto', 'coo', 'bitmap', 'dense', "
+            raise ValueError(f"unknown wire layout {self.wire_layout!r} "
+                             "(valid: 'auto', 'coo', 'bitmap', 'dense', "
                              "'rice')")
         scheme = self.scheme()       # raises on unknown selector/codec/algo
         if self.name.split("+")[0] == "gspar" \
                 and self.algo not in ("greedy", "closed"):
-            raise ValueError(f"unknown gspar algo {self.algo!r}; "
-                             "have ('greedy', 'closed')")
+            raise ValueError(f"unknown gspar algo {self.algo!r} "
+                             "(valid: 'greedy', 'closed')")
         if self.error_feedback:
             if scheme.selector.name == "identity" \
                     and not (scheme.codec.rounds_values
@@ -136,13 +147,10 @@ class CompressionConfig:
                     f"unsupported (scheme, error_feedback) pair "
                     f"({self.name!r}, True): identity selection with a "
                     "lossless codec has zero residual; error feedback "
-                    "would be a silent no-op.")
-            if self.resparsify_pods:
-                raise ValueError(
-                    "unsupported (error_feedback, resparsify_pods) pair "
-                    "(True, True): the pod-stage re-sparsification performs "
-                    "a second compression whose residual is not carried; "
-                    "its error would be silently dropped every step.")
+                    "would be a silent no-op. Valid with error feedback: "
+                    "any sparsifying selector ('gspar', 'unisp', 'topk', "
+                    "'bernoulli'), or identity composed with a rounding "
+                    "codec ('bf16', 'qsgd<bits>', 'ternary').")
 
     def scheme(self) -> schemes_lib.Scheme:
         """The resolved selector ∘ codec composition (cached per config —
@@ -158,6 +166,27 @@ class CompressionConfig:
     def capacity(self, d: int) -> int:
         """Scheme-aware static sparse-wire capacity for a leaf of size d."""
         return self.scheme().selector.capacity(d, self.capacity_slack)
+
+    def describe(self) -> str:
+        """One-line human summary of the resolved configuration — what the
+        launchers print at startup and the sweep drivers use as labels.
+        Only settings that are active for this config appear (e.g. no
+        wire-layout/exchange noise for the dense wire)."""
+        parts = [self.scheme().name, f"rho={self.rho:g}",
+                 f"wire={self.wire}"]
+        if self.wire != "dense":
+            parts += [f"layout={self.wire_layout}",
+                      f"exchange={self.exchange}"]
+            if self.bucket_coord_cap != 2**31 - 1:
+                parts.append(f"coord_cap={self.bucket_coord_cap}")
+        parts.append(f"backend={self.backend}")
+        if self.error_feedback:
+            parts.append("ef")
+        if self.resparsify_pods:
+            parts.append("resparsify_pods")
+        if self.xla_preset != "none":
+            parts.append(f"xla={self.xla_preset}")
+        return " ".join(parts)
 
 
 @functools.lru_cache(maxsize=None)

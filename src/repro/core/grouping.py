@@ -43,12 +43,21 @@ class Group:
     ``(leaf_index, rows)`` pairs for sparse groups — consecutive row blocks
     of the stack, one row per flat leaf, one per layer of a stacked leaf —
     and ``(leaf_index, size)`` element runs for the dense group.
+
+    ``row_chunks`` is the plan-level bucket-chunking decision: the row
+    counts per capacity-bounded wire chunk if this group alone filled a
+    sparse bucket under ``cfg.bucket_coord_cap`` (a single entry means the
+    group fits one collective; dense groups, which psum instead of
+    scatter, record ``()``). The sync layer applies the same greedy rule
+    (``chunk_spans``) to the actual bucket contents, which may concatenate
+    several groups.
     """
     kind: str                              # "sparse" | "dense"
     dtype: str                             # leaf dtype (part of the group key)
     d: int                                 # row length (sparse) / run unit (dense)
     k_cap: int                             # static capacity per row (0 for dense)
     members: tuple[tuple[int, int], ...]   # ((leaf_index, rows_or_size), ...)
+    row_chunks: tuple[int, ...] = ()       # rows per wire chunk (sparse only)
 
     @property
     def rows(self) -> int:
@@ -66,6 +75,56 @@ class TreePlan:
         bench's ``dispatch:*`` row pins. The dense passthrough group is a
         concat + psum, not a compression dispatch, so it does not count."""
         return sum(1 for g in self.groups if g.kind == "sparse")
+
+    @property
+    def chunk_count(self) -> int:
+        """Total wire chunks the sparse groups split into under the plan's
+        ``bucket_coord_cap`` — 1 per group when nothing chunks."""
+        return sum(len(g.row_chunks) for g in self.groups
+                   if g.kind == "sparse")
+
+
+def chunk_spans(entries, cap: int) -> list[tuple[tuple[int, int, int], ...]]:
+    """Greedy row-granular chunking of one wire bucket's entries.
+
+    ``entries`` is an iterable of ``(entry_id, rows, d)``: each entry
+    contributes ``rows`` row blocks of ``d`` coordinates to the bucket's
+    concatenated coordinate space. Returns chunks in entry/row order, each
+    a tuple of ``(entry_id, r0, n)`` row spans with ``sum(n * d) <= cap``
+    — every chunk is one collective with its own rebased int32 coordinate
+    space, so a tree of any size rides the sparse wire as long as no
+    single row exceeds ``cap``. Chunk boundaries are row-granular (one
+    row = one layer of one leaf), so scatter order within every chunk
+    stays worker-major over disjoint leaf blocks and the chunked exchange
+    remains bit-identical to the unchunked one.
+    """
+    chunks: list = []
+    cur: list = []
+    cur_coords = 0
+    for eid, rows, d in entries:
+        if d > cap:
+            raise ValueError(
+                f"one row of entry {eid!r} spans {d} coordinates, more than "
+                f"bucket_coord_cap={cap}: a single row cannot be split "
+                "across wire chunks. Shard the leaf over the model axis "
+                "before compression, or raise "
+                "CompressionConfig.bucket_coord_cap (hard int32 ceiling "
+                f"{2**31 - 1}).")
+        r0 = 0
+        while rows:
+            room = (cap - cur_coords) // d
+            if room == 0:
+                chunks.append(tuple(cur))
+                cur, cur_coords = [], 0
+                room = cap // d
+            n = min(rows, room)
+            cur.append((eid, r0, n))
+            cur_coords += n * d
+            r0 += n
+            rows -= n
+    if cur:
+        chunks.append(tuple(cur))
+    return chunks
 
 
 def leaf_rows(shape: tuple[int, ...], stacked: bool) -> tuple[int, int]:
@@ -98,7 +157,12 @@ def _plan_cached(cfg, specs) -> TreePlan:
             continue
         rows, d = leaf_rows(shape, stk)
         sparse.setdefault((dtype, d, cfg.capacity(d)), []).append((i, rows))
-    groups = [Group("sparse", dtype, d, k_cap, tuple(members))
+    cap = cfg.bucket_coord_cap
+    groups = [Group("sparse", dtype, d, k_cap, tuple(members),
+                    row_chunks=tuple(
+                        sum(n for _, _, n in chunk)
+                        for chunk in chunk_spans(
+                            [(0, sum(r for _, r in members), d)], cap)))
               for (dtype, d, k_cap), members in sparse.items()]
     if dense:
         groups.append(Group("dense", "float32", sum(n for _, n in dense), 0,

@@ -7,7 +7,7 @@ sampling probabilities and the kept (amplified) values; a ``ValueCodec``
 (repro.core.codecs) owns their wire representation. A ``Scheme`` composes
 the two — ``gspar+qsgd8`` is Qsparse-local-SGD-style sparsify-then-quantize
 (Basu et al. 2019), ``bernoulli ∘ ternary`` is exactly TernGrad — and every
-legacy compressor in repro.core.compressors is a thin alias over one.
+legacy compressor in repro.core._compressors is a thin alias over one.
 
 Selectors:
   gspar     -- Wangni et al. optimal probabilities (Algorithm 2 closed-form
@@ -251,7 +251,7 @@ class Scheme:
 
     def compress(self, key: jax.Array, g: jax.Array):
         """(key, g) -> CompressedGrad; the dense-wire entry point."""
-        from repro.core.compressors import finish_compressed
+        from repro.core._compressors import finish_compressed
         q, p, _, _ = self.apply_dense(key, g)
         bits = self.message_bits(q, p, g.size)
         return finish_compressed(g, q, p, bits)

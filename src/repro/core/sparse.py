@@ -219,7 +219,7 @@ class ReferenceBackend:
         # slots point at zero-magnitude coords whose encoded level is 0.
         wire_vals = wire.reshape(-1)[idx]
         bits = scheme.message_bits(q, p, g.size)
-        from repro.core.compressors import finish_compressed
+        from repro.core._compressors import finish_compressed
         cg = finish_compressed(g, q, p, bits)
         return SparseGrad(values=wire_vals, idx=idx, nnz=nnz,
                           p_sum=jnp.sum(p), bits=cg.bits,

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compressors import make_compressor
+from repro.core._compressors import make_compressor
 
 
 def logreg_loss(w, x, y, lam2):

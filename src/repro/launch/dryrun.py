@@ -315,6 +315,10 @@ def main(argv=None):
             print(f"{arch:28s} {shape:12s} {st}")
         return 0
 
+    comp = CompressionConfig(name=args.compressor, rho=args.rho,
+                             wire=args.wire, backend=args.backend,
+                             exchange=args.exchange, min_leaf_size=4096)
+    print(f"compression: {comp.describe()}", file=sys.stderr)
     rec = lower_pair(args.arch, args.shape, args.multi_pod, wire=args.wire,
                      compressor=args.compressor, rho=args.rho,
                      remat=args.remat, train_mode=args.train_mode,

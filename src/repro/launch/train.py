@@ -74,6 +74,10 @@ def main(argv=None):
     ap.add_argument("--error-feedback", action="store_true",
                     help="carry the per-worker compression residual "
                          "(memory: one params-sized buffer per worker)")
+    ap.add_argument("--resparsify-pods", action="store_true",
+                    help="re-sparsify the inter-pod stage (Alg.1 step 7) "
+                         "on multi-pod meshes; with --error-feedback the "
+                         "pod stage carries its own per-pod residual")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "reference", "pallas"],
                     help="compression backend (pallas = fused kernels)")
@@ -123,18 +127,25 @@ def main(argv=None):
                              wire=args.wire, wire_layout=args.wire_layout,
                              backend=args.backend,
                              error_feedback=args.error_feedback,
+                             resparsify_pods=args.resparsify_pods,
                              exchange=args.exchange,
                              overlap_bucket_bytes=args.overlap_bucket_bytes,
                              xla_preset=args.xla_preset,
                              min_leaf_size=1024)
-    print(f"compression: {comp.scheme().name} wire={comp.wire} "
-          f"layout={comp.wire_layout} exchange={comp.exchange}")
+    print(f"compression: {comp.describe()}")
     ef_state = None
     if comp.error_feedback:
-        # compressed mode: stacked per-worker residual; fsdp: params-shaped
-        ef_state = (init_feedback(params, step_lib.mesh_workers(mesh,
-                                                                multi_pod))
-                    if mode == "compressed" else init_feedback(params))
+        # compressed mode: stacked per-worker residual (plus the per-pod
+        # one when the pod stage recompresses); fsdp: params-shaped
+        if mode == "compressed":
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            num_pods = (sizes["pod"]
+                        if multi_pod and comp.resparsify_pods else None)
+            ef_state = init_feedback(params,
+                                     step_lib.mesh_workers(mesh, multi_pod),
+                                     num_pods=num_pods)
+        else:
+            ef_state = init_feedback(params)
     with jax.set_mesh(mesh):
         # Donate params/opt_state (and the EF residual, which the grouped
         # compression path consumes into fresh stacked buffers) — the train

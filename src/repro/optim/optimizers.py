@@ -36,11 +36,21 @@ class FeedbackState:
     per-worker axis, sharded exactly like the stacked gradients that cross
     the sync shard_map boundary; in the fsdp step leaves are params-shaped.
     Memory cost: one params-sized f32/bf16 buffer per worker.
+
+    ``pod_residual`` is the second-stage residual of hierarchical sync with
+    ``resparsify_pods``: the error of re-sparsifying the intra-pod average
+    before the inter-pod exchange. Per POD, not per worker — every data
+    worker of a pod carries an identical copy (the pod stage's input, key,
+    and carried state are all data-axis-invariant), so its leaves take a
+    leading pod axis of size ``num_pods``, replicated over the data axis.
+    ``None`` whenever the pod stage does not recompress.
     """
     residual: Any
+    pod_residual: Any = None
 
 
-def init_feedback(params: Any, num_workers: int | None = None) -> FeedbackState:
+def init_feedback(params: Any, num_workers: int | None = None,
+                  num_pods: int | None = None) -> FeedbackState:
     """Zero residual state.
 
     ``num_workers=None`` -> fsdp layout (leaves shaped like params).
@@ -48,13 +58,30 @@ def init_feedback(params: Any, num_workers: int | None = None) -> FeedbackState:
     worker axis of global size W (the product of the manual data/pod mesh
     axes), matching the stacked per-worker gradients entering the sync
     region.
+    ``num_pods=P``       -> additionally build the hierarchical pod-stage
+    residual (``resparsify_pods`` + error feedback): params-tree leaves
+    with a leading pod axis of size P.
     """
     if num_workers is None:
+        if num_pods is not None:
+            raise ValueError(
+                "num_pods requires the compressed-step layout "
+                "(pass num_workers too)")
         return FeedbackState(residual=jax.tree.map(jnp.zeros_like, params))
     if num_workers < 1:
         raise ValueError(f"num_workers must be >= 1, got {num_workers}")
-    return FeedbackState(residual=jax.tree.map(
-        lambda p: jnp.zeros((num_workers,) + tuple(p.shape), p.dtype), params))
+    pod_res = None
+    if num_pods is not None:
+        if num_pods < 1:
+            raise ValueError(f"num_pods must be >= 1, got {num_pods}")
+        pod_res = jax.tree.map(
+            lambda p: jnp.zeros((num_pods,) + tuple(p.shape), p.dtype),
+            params)
+    return FeedbackState(
+        residual=jax.tree.map(
+            lambda p: jnp.zeros((num_workers,) + tuple(p.shape), p.dtype),
+            params),
+        pod_residual=pod_res)
 
 
 def _tree_cast(tree, dtype):

@@ -73,14 +73,20 @@ def init_compressed_feedback(cfg: transformer.ModelConfig,
                              multi_pod: bool = False) -> FeedbackState:
     """Zero FeedbackState in the compressed step's stacked per-worker
     layout (leading axis = mesh_workers(mesh)), structure matching the
-    model's gradient tree."""
+    model's gradient tree. With ``comp.resparsify_pods`` on a multi-pod
+    mesh the state additionally carries the pod-stage residual (leading
+    axis = pod count, replicated over the data axis)."""
     if not comp.error_feedback:
         raise ValueError("init_compressed_feedback with error_feedback=False")
     # shapes only — never materialize (or randomly initialize) the params
     param_sds = jax.eval_shape(lambda k: transformer.init_model(k, cfg),
                                jax.random.key(0))
     vals, _ = split_params(param_sds)
-    return init_feedback(vals, num_workers=mesh_workers(mesh, multi_pod))
+    num_pods = None
+    if multi_pod and comp.resparsify_pods:
+        num_pods = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+    return init_feedback(vals, num_workers=mesh_workers(mesh, multi_pod),
+                         num_pods=num_pods)
 
 
 def make_compressed_train_step(cfg: transformer.ModelConfig,
@@ -102,7 +108,10 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
     ``init_compressed_feedback``). The residual rides the same shard_map
     in/out specs as the stacked grads, so it survives the manual-axis
     boundary, scan-over-layers stacking, and checkpointing like any other
-    state pytree.
+    state pytree. With ``comp.resparsify_pods`` on a multi-pod mesh the
+    state also carries ``pod_residual`` (leading pod axis, replicated over
+    data), threading the pod-stage re-sparsification error through the
+    same boundary.
 
     shard_local_sync: compress each tensor-parallel shard's gradient slice
     locally (nested shard_map over the model axis). Without it the top_k /
@@ -162,7 +171,9 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
         axis_names=set(manual), check_vma=False)
 
     sync_axes = set(manual) | ({"model"} if shard_local_sync else set())
+    key_axes = tuple(sorted(sync_axes))   # per-worker RNG fold order
     ef = comp.error_feedback
+    hier_ef = ef and comp.resparsify_pods and multi_pod
 
     def _reduce_stats(stats):
         if shard_local_sync:
@@ -178,16 +189,11 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                 overflow=jax.lax.psum(stats.overflow, "model"))
         return jax.tree.map(lambda s: jax.lax.pmean(s, manual), stats)
 
-    def _fold_sync_key(key):
-        for a in sorted(sync_axes):
-            key = jax.random.fold_in(key, jax.lax.axis_index(a))
-        return key
-
     def sync_fn(grads_stacked, key):
         grads = jax.tree.map(lambda g: g[0], grads_stacked)
-        synced, _, stats = sync_tree(comp, _fold_sync_key(key), grads,
+        synced, _, stats = sync_tree(comp, key, grads,
                                      data_axis="data", pod_axis=pod_axis,
-                                     stacked=stacked, fold_worker_key=False)
+                                     stacked=stacked, key_axes=key_axes)
         return synced, _reduce_stats(stats)
 
     def sync_fn_ef(grads_stacked, res_stacked, key):
@@ -195,12 +201,27 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
         # as the grads, so it shards identically across the manual axes
         grads = jax.tree.map(lambda g: g[0], grads_stacked)
         res = jax.tree.map(lambda r: r[0], res_stacked)
-        synced, new_res, stats = sync_tree(comp, _fold_sync_key(key), grads,
-                                           data_axis="data",
-                                           pod_axis=pod_axis, stacked=stacked,
-                                           fold_worker_key=False,
-                                           residual=res)
-        return (synced, jax.tree.map(lambda r: r[None], new_res),
+        synced, new_fb, stats = sync_tree(comp, key, grads,
+                                          data_axis="data",
+                                          pod_axis=pod_axis, stacked=stacked,
+                                          key_axes=key_axes, feedback=res)
+        return (synced, jax.tree.map(lambda r: r[None], new_fb.residual),
+                _reduce_stats(stats))
+
+    def sync_fn_hier_ef(grads_stacked, res_stacked, pod_res_stacked, key):
+        # worker residual rides the stacked per-worker layout; the pod
+        # residual rides a leading POD axis, replicated over data (the pod
+        # stage's input/key/state are data-axis-invariant, so every data
+        # worker recomputes the identical new pod residual)
+        grads = jax.tree.map(lambda g: g[0], grads_stacked)
+        res = jax.tree.map(lambda r: r[0], res_stacked)
+        pod_res = jax.tree.map(lambda r: r[0], pod_res_stacked)
+        synced, new_fb, stats = sync_tree(
+            comp, key, grads, data_axis="data", pod_axis=pod_axis,
+            stacked=stacked, key_axes=key_axes,
+            feedback=FeedbackState(residual=res, pod_residual=pod_res))
+        return (synced, jax.tree.map(lambda r: r[None], new_fb.residual),
+                jax.tree.map(lambda r: r[None], new_fb.pod_residual),
                 _reduce_stats(stats))
 
     sync_in_specs = (stacked_specs if shard_local_sync
@@ -210,7 +231,16 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
     sync_out_specs = (grad_specs if shard_local_sync
                       else jax.tree.map(lambda s: P(), grad_specs,
                                         is_leaf=lambda t: isinstance(t, P)))
-    if ef:
+    pod_res_specs = jax.tree.map(
+        lambda s: P("pod", *tuple(s)) if shard_local_sync else P("pod"),
+        grad_specs, is_leaf=lambda t: isinstance(t, P))
+    if hier_ef:
+        sync_sharded = jax.shard_map(
+            sync_fn_hier_ef, mesh=mesh,
+            in_specs=(sync_in_specs, sync_in_specs, pod_res_specs, P()),
+            out_specs=(sync_out_specs, sync_in_specs, pod_res_specs, P()),
+            axis_names=sync_axes, check_vma=False)
+    elif ef:
         sync_sharded = jax.shard_map(
             sync_fn_ef, mesh=mesh,
             in_specs=(sync_in_specs, sync_in_specs, P()),
@@ -246,6 +276,18 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                                                opt_state, params)
         return new_params, new_opt, FeedbackState(residual=new_res), metrics
 
+    def train_step_hier_ef(params, opt_state, ef_state, batch, key):
+        loss, grads_stacked = grad_sharded(params, batch)
+        grads, new_res, new_pod_res, stats = sync_sharded(
+            grads_stacked, ef_state.residual, ef_state.pod_residual, key)
+        new_params, new_opt, metrics = _finish(loss, grads, stats,
+                                               opt_state, params)
+        return (new_params, new_opt,
+                FeedbackState(residual=new_res, pod_residual=new_pod_res),
+                metrics)
+
+    if hier_ef:
+        return train_step_hier_ef
     return train_step_ef if ef else train_step
 
 

@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 
 from repro.comm import compaction
-from repro.comm.sync import _bucketed_sync
+from repro.comm.sync import sync_tree
 from repro.core import sparsify
 from repro.core.api import CompressionConfig, compress_tree_sparse
 from repro.core.sparse import ReferenceBackend
@@ -245,12 +245,10 @@ class TestPackedWire:
                                 min_leaf_size=8, backend=backend,
                                 capacity_slack=4.0)
         g = {"w": _grad(9, (1 << 13,))}
-        leaves = jax.tree.leaves(g)
 
         def one_worker(key, grads):
-            items, _, _, _ = compress_tree_sparse(cfg, key, grads)
-            out, wire, ovf = _bucketed_sync(items, leaves, "data", cfg)
-            return out[0], wire
+            synced, _, stats = sync_tree(cfg, key, grads, data_axis="data")
+            return synced["w"], stats.wire_bytes
 
         mesh = jax.make_mesh((1,), ("data",))
         from jax.sharding import PartitionSpec as P

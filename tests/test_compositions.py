@@ -11,7 +11,9 @@
   * coding-model property: realized bits never exceed the Theorem-4-style
     "every kept coordinate listed at full price" bound, and match
     hand-computed bits on a small fixed vector, for every composition
-  * the int32 bucket-coordinate guard of the sparse wire
+  * bucket chunking: oversized coordinate spaces split into capacity-bounded
+    wire chunks at plan time (bit-identical to the unchunked exchange) instead
+    of aborting at the int32 guard
 """
 import jax
 import jax.numpy as jnp
@@ -20,10 +22,9 @@ import pytest
 
 from dist_harness import run_with_devices
 from repro.comm import compaction
-from repro.comm.sync import _bucketed_sync
+from repro.comm.sync import sync_tree
 from repro.core import coding
 from repro.core.api import CompressionConfig, compress_tree, compress_tree_sparse
-from repro.core.sparse import SparseGrad
 
 COMPOSITIONS = ("gspar", "unisp", "topk", "qsgd", "terngrad", "none",
                 "gspar+bf16", "gspar+qsgd8", "gspar+ternary", "unisp+qsgd4",
@@ -540,35 +541,64 @@ class TestBucketGuard:
         with pytest.raises(ValueError, match="[Cc]hunk"):
             compaction.check_bucket_coords(2**31, 4)
 
-    def test_bucketed_sync_raises_on_oversized_tree(self):
-        """Three mocked 2^30-coordinate leaves: small k_cap buffers but a
-        static coordinate space past int32 — the sync must raise at trace
-        time with chunking advice instead of letting offsets wrap."""
+    def test_huge_tree_plans_chunks_and_traces(self):
+        """Three 2^30-coordinate leaves: the concatenated bucket coordinate
+        space is past int32, which used to abort the sparse wire at trace
+        time — the plan now splits it into capacity-bounded chunks and the
+        sync traces through (abstractly: no 4 GiB arrays are built)."""
         from jax.sharding import PartitionSpec as P
+
+        from repro.core.grouping import plan_tree
         big_d = 2**30
-        k = 128
-
-        def mock_leaf():
-            return SparseGrad(
-                values=jnp.ones((k,), jnp.float32),
-                idx=jnp.arange(k, dtype=jnp.int32),
-                nnz=jnp.asarray(k, jnp.int32),
-                p_sum=jnp.asarray(float(k)),
-                bits=jnp.zeros(()), var_ratio=jnp.zeros(()),
-                d=big_d, shape=(big_d,))
-
-        cfg = CompressionConfig(name="gspar", rho=0.001, wire="gather",
+        cfg = CompressionConfig(name="gspar", rho=1e-6, wire="gather",
                                 min_leaf_size=8)
-        items = [("sparse", mock_leaf(), ((i, 1),)) for i in range(3)]
-        leaves = [None] * 3                      # untouched before the guard
+        specs = {f"w{i}": jax.ShapeDtypeStruct((big_d,), jnp.float32)
+                 for i in range(3)}
+        plan = plan_tree(cfg, jax.tree.leaves(specs), [False] * 3)
+        assert plan.chunk_count == 3             # one row per int32 window
+
         mesh = jax.make_mesh((1,), ("data",))
 
-        def sync(_):
-            out, wire, ovf = _bucketed_sync(items, leaves, "data", cfg)
-            return ovf
+        def sync(g):
+            synced, _, stats = sync_tree(cfg, jax.random.key(0), g,
+                                         data_axis="data")
+            return stats.overflow
 
         with jax.set_mesh(mesh):
-            with pytest.raises(ValueError, match="[Cc]hunk"):
-                jax.jit(jax.shard_map(sync, mesh=mesh, in_specs=(P(),),
-                                      out_specs=P(), axis_names={"data"},
-                                      check_vma=False))(jnp.zeros(()))
+            out = jax.eval_shape(jax.shard_map(
+                sync, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                axis_names={"data"}, check_vma=False), specs)
+        assert out.shape == ()
+
+    def test_chunked_exchange_bit_identical_and_same_bytes(self):
+        """Forcing a small bucket_coord_cap chunks a real tree's bucket;
+        the synced gradients and the wire-byte accounting must both stay
+        exactly what the single-chunk exchange produces."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.grouping import plan_tree
+        rng = np.random.default_rng(17)
+        grads = {f"w{i}": jnp.asarray(rng.standard_normal(1024),
+                                      jnp.float32) for i in range(6)}
+        kw = dict(name="gspar", rho=0.05, wire="gather", min_leaf_size=8,
+                  capacity_slack=4.0)
+        mesh = jax.make_mesh((1,), ("data",))
+
+        def run(cfg):
+            def sync(g):
+                return sync_tree(cfg, jax.random.key(5), g,
+                                 data_axis="data")
+            with jax.set_mesh(mesh):
+                return jax.jit(jax.shard_map(
+                    sync, mesh=mesh, in_specs=(P(),),
+                    out_specs=(P(), P(), P()), axis_names={"data"},
+                    check_vma=False))(grads)
+
+        ref, _, ref_stats = run(CompressionConfig(**kw))
+        capped = CompressionConfig(bucket_coord_cap=2048, **kw)
+        plan = plan_tree(capped, jax.tree.leaves(grads), [False] * 6)
+        assert plan.chunk_count == 3             # 6 rows of 1024, 2 per cap
+        got, _, got_stats = run(capped)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert float(got_stats.wire_bytes) == float(ref_stats.wire_bytes)

@@ -160,11 +160,11 @@ cfg = CompressionConfig(name="topk", rho=rho, wire="gather", min_leaf_size=8,
 def f(gs_stacked, res_stacked):
     g = {"w": gs_stacked[0]}
     res = {"w": res_stacked[0]}
-    synced, new_res, stats = sync_tree(cfg, jax.random.key(0), g,
-                                       data_axis="data", pod_axis="pod",
-                                       fold_worker_key=False, residual=res)
+    synced, new_fb, stats = sync_tree(cfg, jax.random.key(0), g,
+                                      data_axis="data", pod_axis="pod",
+                                      key_axes=(), feedback=res)
     ovf = jax.lax.psum(stats.overflow, ("pod", "data"))
-    return synced["w"], new_res["w"][None], ovf
+    return synced["w"], new_fb.residual["w"][None], ovf
 
 with jax.set_mesh(mesh):
     synced, new_res, ovf = jax.jit(jax.shard_map(
@@ -214,6 +214,36 @@ with jax.set_mesh(mesh):
         p, s, m = ts(p, s, batch, jax.random.key(i))
         losses.append(float(m["loss"]))
     print("L0", losses[0], "LN", losses[-1])
+assert losses[-1] < losses[0] * 0.95, losses
+print("OK")
+""", n_devices=8)
+    assert "OK" in out
+
+
+def test_multipod_resparsify_with_error_feedback_trains():
+    """The full hierarchical train step: resparsify_pods + EF carries BOTH
+    residuals (stacked per-worker + per-pod) through the shard_map
+    boundary, trains, and actually uses them (nonzero after a step)."""
+    out = run_with_devices(COMMON + """
+mesh = mesh_lib.make_mesh((2, 2, 2), ("pod", "data", "model"))
+rules = shd.with_pod(dict(shd.DP_RULES))
+comp = CompressionConfig(name="topk", rho=0.1, wire="gather", min_leaf_size=8,
+                         resparsify_pods=True, error_feedback=True)
+with jax.set_mesh(mesh):
+    ts = jax.jit(step_lib.make_compressed_train_step(cfg, comp, opt, mesh, rules,
+                                                     multi_pod=True))
+    ef = step_lib.init_compressed_feedback(cfg, comp, mesh, multi_pod=True)
+    assert ef.pod_residual is not None
+    p, s = params, opt_state
+    losses = []
+    for i in range(10):
+        p, s, ef, m = ts(p, s, ef, batch, jax.random.key(i))
+        losses.append(float(m["loss"]))
+    print("L0", losses[0], "LN", losses[-1])
+    r1 = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(ef.residual))
+    R1 = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(ef.pod_residual))
+    print("worker residual l1", r1, "pod residual l1", R1)
+    assert r1 > 0.0 and R1 > 0.0
 assert losses[-1] < losses[0] * 0.95, losses
 print("OK")
 """, n_devices=8)

@@ -96,11 +96,6 @@ class TestConfigValidation:
         with pytest.raises(ValueError, match="conflicting"):
             CompressionConfig(name="gspar+qsgd8", codec="bf16")
 
-    def test_ef_with_resparsify_pods_raises(self):
-        with pytest.raises(ValueError, match="resparsify_pods"):
-            CompressionConfig(name="gspar", error_feedback=True,
-                              resparsify_pods=True)
-
     def test_unknown_wire_raises(self):
         with pytest.raises(ValueError, match="wire"):
             CompressionConfig(name="gspar", wire="carrier-pigeon")

@@ -221,7 +221,7 @@ def _sync(cfg, key, grads, residual=None):
 
     def step(k, g, *r):
         return sync_tree(cfg, k, g, data_axis="data", stacked=STACKED,
-                         residual=r[0] if r else None)
+                         feedback=r[0] if r else None)
 
     with jax.set_mesh(mesh):
         fn = jax.jit(jax.shard_map(

@@ -40,7 +40,7 @@ except ImportError:                      # pragma: no cover - minimal container
         return deco
 
 from repro.core import coding, sparsify
-from repro.core.compressors import REGISTRY, make_compressor
+from repro.api import REGISTRY, make_compressor
 
 jax.config.update("jax_enable_x64", False)
 

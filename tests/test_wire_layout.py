@@ -297,7 +297,7 @@ class TestLayoutWireEquivalence:
         def run(cfg):
             def step(k, g, r):
                 return sync_tree(cfg, k, g, data_axis="data",
-                                 stacked=STACKED, residual=r)
+                                 stacked=STACKED, feedback=r)
             with jax.set_mesh(mesh):
                 fn = jax.jit(jax.shard_map(
                     step, mesh=mesh, in_specs=(P(), P(), P()),
