@@ -57,8 +57,16 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # is dominated by that barrier, not by the staging the overlapped
 # exchange restructures — the delta hovers inside timer jitter and would
 # flap a strict gate.
+#
+# gather:auto was demoted to informational for the same reason: the auto
+# argmin puts its big leaves on the RICE branch, so the row inherits the
+# two-phase host sync and its overlap delta flips sign run-to-run
+# (measured 0.976x-1.005x across quiet regenerations, and a baseline
+# was once committed at 0.988x, i.e. in violation). packed:auto is the
+# acceptance pair — single-phase word streams, where the overlapped
+# staging is the whole story and the win reproduces.
 ROWS = (
-    ("gather", "auto", True),
+    ("gather", "auto", False),
     ("packed", "auto", True),
     ("gather", "rice", False),   # in-band counts vs two-phase exchange
     ("gather", "coo", False),
@@ -284,6 +292,48 @@ def run(quick: bool = False, return_payload: bool = False,
                 f"{wire}:{layout}: overlapped exchange "
                 f"({overlap_us:.0f}us) did not beat the sync barrier "
                 f"({sync_us:.0f}us) — do not commit this baseline")
+
+    # adaptive control-loop row: the same model tree through the full
+    # adaptive sync (delta transmission against zero last-sent state,
+    # bound priming, fitted Golomb headers) — measures what the control
+    # loop costs per step on top of the static rice row above. Timing is
+    # band-gated like every step row; the byte invariant (adaptive <=
+    # static at matched density) is bench_wire's gate.
+    from repro.optim.optimizers import ControlState, FeedbackState
+    ad_cfg = CompressionConfig(name="agspar", rho=0.01, wire="gather",
+                               wire_layout="rice", min_leaf_size=256,
+                               backend="reference", exchange="sync",
+                               error_feedback=True, adaptive=True,
+                               delta_beta=1.0, skip_tau=0.7,
+                               bound_decay=0.9, rice_fitted=True)
+
+    def ad_step(key, g):
+        fb = FeedbackState(residual=jax.tree.map(jnp.zeros_like, g))
+        ctl = ControlState(
+            last_sent=jax.tree.map(jnp.zeros_like, g),
+            last_avg=jax.tree.map(jnp.zeros_like, g),
+            bound=jax.tree.map(lambda x: jnp.zeros((), jnp.float32), g),
+            step=jnp.zeros((), jnp.int32))
+        synced, _, _, stats = sync_tree(ad_cfg, key, g, data_axis="data",
+                                        stacked=stacked, feedback=fb,
+                                        control=ctl)
+        return synced, stats
+    with jax.set_mesh(mesh):
+        ad_fn = jax.jit(jax.shard_map(ad_step, mesh=mesh,
+                                      in_specs=(P(), P()),
+                                      out_specs=(P(), P()),
+                                      axis_names={"data"}, check_vma=False))
+        ad_out = ad_fn(*args)
+        jax.block_until_ready(ad_out[0])
+        ad_us = timed_us_min(
+            lambda: jax.block_until_ready(ad_fn(*args)[0]), iters=iters)
+    payload["step:gather:rice:adaptive"] = {
+        "us_per_step": ad_us,
+        "wire_bytes": float(ad_out[1].wire_bytes),
+        "dense_bytes": float(dense_bytes),
+    }
+    rows.append(("step:gather:rice:adaptive", ad_us,
+                 f"wire_bytes={float(ad_out[1].wire_bytes):.3g}"))
 
     # per-stage attribution runs AFTER every row is timed: the extra jit
     # compiles and live buffers it creates must not perturb the gated

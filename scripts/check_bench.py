@@ -8,7 +8,11 @@ byte metrics regress beyond its tolerance band. Timing fields are
 deliberately ignored (CI runners are noisy); byte metrics are statically
 determined by the wire format, so any growth is a real protocol
 regression — exactly what the wire-format-v2 work exists to prevent
-silently re-happening.
+silently re-happening. The wire gate also enforces the adaptive
+invariant on both payloads: the ``adaptive:fitted`` row's realized bytes
+must not exceed ``adaptive:static``'s at matched density (the fitted
+Golomb window contains the static parameter, so losing is a protocol
+bug, never a draw artifact).
 
 ``--gate step`` compares a freshly generated ``BENCH_step.json`` and gates
 the timing metrics per row with a deliberately wide band (STEP_TOLERANCE —
@@ -60,11 +64,17 @@ STEP_GATED_METRICS = ("wire_bytes", "us_per_step",
                       "compress_us", "pack_us", "apply_us", "collective_us")
 STEP_TIMING_METRICS = ("us_per_step", "compress_us", "pack_us", "apply_us",
                        "collective_us")
-STEP_TOLERANCE = 0.5                 # timing band: runners are noisy
+# timing band: runners are noisy. Calibrated against observed same-code
+# drift on a shared host: identical code re-benched two hours apart moved
+# compress_us +52% and the few-ms collective stages +60..138%, so 50%
+# cried wolf. The gate's job is catching order-of-magnitude blowups (an
+# accidental retrace per step is 10-100x), not host-state weather.
+STEP_TOLERANCE = 0.75
 # absolute slack on the step timing bands: the collective/pack residuals
-# are a few ms, where 50% relative is inside scheduler jitter — a stage
-# must regress by BOTH 50% and 2ms before it fails
-STEP_TIMING_FLOOR_US = 2000.0
+# are 10-30ms in interpret mode, where even 75% relative is inside
+# cross-day scheduler drift — a stage must regress by BOTH the relative
+# band and 15ms before it fails
+STEP_TIMING_FLOOR_US = 15000.0
 # rows whose metrics are static facts, gated exactly (no band): the
 # dispatch census is a trace-time property of tree + config, so any
 # drift means the grouping plan changed shape
@@ -119,6 +129,32 @@ def _check_step_invariant(base: dict) -> list[str]:
     return failures
 
 
+def _check_adaptive_invariant(payload: dict, label: str) -> list[str]:
+    """The deterministic half of the wire gate for the adaptive control
+    loop: the adaptive pipeline's realized bytes must not exceed the
+    static pipeline's at matched density (same rho ceiling, same k_cap,
+    same key, forced rice layout — see benchmarks.bench_wire's adaptive
+    rows). Checked on BOTH payloads: the committed baseline must never
+    have been committed in a losing state, and a fresh run that loses is
+    a real wire regression (the draw is seeded), never noise."""
+    failures = []
+    stat = payload.get("adaptive:static")
+    fit = payload.get("adaptive:fitted")
+    if stat is None or fit is None:
+        failures.append(
+            f"{label}: adaptive:static/adaptive:fitted rows missing — the "
+            "adaptive-vs-static byte gate is unchecked (regenerate with "
+            "python -m benchmarks.bench_wire --json)")
+        return failures
+    s, f = float(stat["wire_bytes"]), float(fit["wire_bytes"])
+    if f > s:
+        failures.append(
+            f"{label}: adaptive realized bytes {f:.0f} exceed the static "
+            f"pipeline's {s:.0f} at matched density — the fitted-window "
+            "never-lose guarantee regressed")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", help="freshly generated benchmark payload")
@@ -145,6 +181,9 @@ def main(argv=None) -> int:
     failures, notes = [], []
     if args.gate == "step":
         failures.extend(_check_step_invariant(base))
+    if args.gate == "wire":
+        failures.extend(_check_adaptive_invariant(base, "baseline"))
+        failures.extend(_check_adaptive_invariant(fresh, "fresh"))
     for key, brec in sorted(base.items()):
         if key in SKIP_KEYS or not isinstance(brec, dict):
             continue

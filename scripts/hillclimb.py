@@ -15,6 +15,18 @@ and the XLA flag preset per iteration, e.g.
       --iter 2 --change "exchange=overlap xla=latency_hiding" \
       --hypothesis "overlapped buckets hide the gather behind packing" \
       -- --exchange overlap --xla-preset latency_hiding
+
+Adaptive controller knobs (--adaptive/--delta-beta/--skip-tau/
+--bound-decay/--rice-fitted, forwarded like any other dryrun flag) can be
+swept in one invocation with ``--sweep KNOB=V1,V2,...``: one dryrun per
+value, every variant recorded, the winner (smallest dominant-term cost)
+judged against the baseline:
+
+  PYTHONPATH=src python scripts/hillclimb.py --pair gemma2-27b:train_4k \
+      --iter 3 --change "adaptive skip-tau sweep" \
+      --hypothesis "heavier skipping trades collective for compute" \
+      --sweep skip-tau=0.3,0.5,0.7 \
+      -- --adaptive --error-feedback --rice-fitted --wire-layout rice
 """
 from __future__ import annotations
 
@@ -45,20 +57,8 @@ def baseline_for(pair: str) -> dict:
         ) from None
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--pair", required=True)          # arch:shape
-    ap.add_argument("--iter", type=int, required=True)
-    ap.add_argument("--change", required=True)
-    ap.add_argument("--hypothesis", required=True)
-    ap.add_argument("--baseline-from", default=None,
-                    help="compare against this prior perf record instead of "
-                         "the sweep baseline (chained iterations)")
-    ap.add_argument("rest", nargs=argparse.REMAINDER)
-    args = ap.parse_args()
-
-    arch, shape = args.pair.split(":")
-    extra = [a for a in args.rest if a != "--"]
+def _run_dryrun(arch: str, shape: str, extra: list) -> tuple[dict, str]:
+    """One dryrun invocation; returns (record, compression label)."""
     out = tempfile.mktemp(suffix=".json")
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
            "--shape", shape, "--out", out] + extra
@@ -76,6 +76,44 @@ def main():
     comp_label = next((ln.split("compression: ", 1)[1]
                        for ln in proc.stderr.splitlines()
                        if "compression: " in ln), None)
+    return rec, comp_label
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True)          # arch:shape
+    ap.add_argument("--iter", type=int, required=True)
+    ap.add_argument("--change", required=True)
+    ap.add_argument("--hypothesis", required=True)
+    ap.add_argument("--baseline-from", default=None,
+                    help="compare against this prior perf record instead of "
+                         "the sweep baseline (chained iterations)")
+    ap.add_argument("--sweep", default=None,
+                    help="KNOB=V1,V2,...: run one dryrun per value with "
+                         "--KNOB <value> appended to the forwarded args "
+                         "(e.g. skip-tau=0.3,0.5,0.7), record every "
+                         "variant, judge the winner against the baseline")
+    ap.add_argument("rest", nargs=argparse.REMAINDER)
+    args = ap.parse_args()
+
+    arch, shape = args.pair.split(":")
+    extra = [a for a in args.rest if a != "--"]
+
+    sweep_records = None
+    if args.sweep:
+        knob, _, vals = args.sweep.partition("=")
+        values = [v for v in vals.split(",") if v]
+        if not knob or not values:
+            raise SystemExit(f"--sweep wants KNOB=V1,V2,..., got "
+                             f"{args.sweep!r}")
+        sweep_records = []
+        for v in values:
+            rec_v, label_v = _run_dryrun(arch, shape,
+                                         extra + [f"--{knob}", v])
+            sweep_records.append((v, rec_v, label_v))
+            print(f"sweep {knob}={v}: dominant={rec_v['dominant']} "
+                  + " ".join(f"{k}={rec_v[k]:.4g}s" for k in
+                             ("compute_s", "memory_s", "collective_s")))
 
     if args.baseline_from:
         with open(args.baseline_from) as f:
@@ -87,6 +125,19 @@ def main():
         base = {k: base_full[k] for k in ("compute_s", "memory_s",
                                           "collective_s")}
         base_dom = base_full["dominant"]
+
+    if sweep_records is not None:
+        # the winner is the variant with the smallest cost on the term
+        # that dominated BEFORE the change — the same judging rule as a
+        # single iteration, applied across the sweep
+        dom_key = (base_dom if base_dom.endswith("_s")
+                   else f"{base_dom}_s")
+        value, rec, comp_label = min(sweep_records,
+                                     key=lambda t: t[1][dom_key])
+        knob = args.sweep.split("=", 1)[0]
+        args.change = f"{args.change} [winner {knob}={value}]"
+    else:
+        rec, comp_label = _run_dryrun(arch, shape, extra)
 
     after = {k: rec[k] for k in ("compute_s", "memory_s", "collective_s")}
     dom_term = base_dom  # judge on the term that dominated BEFORE the change
@@ -108,6 +159,11 @@ def main():
         "peak_gb": rec["memory_analysis"]["peak_gb"],
         "dryrun_args": extra, "full_record": rec,
     }
+    if sweep_records is not None:
+        record["sweep"] = [
+            {"value": v, "dominant": r["dominant"],
+             **{k: r[k] for k in ("compute_s", "memory_s", "collective_s")}}
+            for v, r, _ in sweep_records]
     path = os.path.join(PERF, f"{arch.replace('.', '')}_{shape}_"
                               f"iter{args.iter}.json")
     with open(path, "w") as f:

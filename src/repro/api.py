@@ -18,7 +18,13 @@ Three layers, one facade:
   entrypoint: wire format, exchange structure, bucket chunking, and
   two-stage pod hierarchy all dispatch from the config. Error feedback
   state is built by :func:`~repro.optim.optimizers.init_feedback` and
-  carried as a :class:`~repro.optim.optimizers.FeedbackState`.
+  carried as a :class:`~repro.optim.optimizers.FeedbackState`; the
+  adaptive control loop (``CompressionConfig.adaptive`` — per-step delta
+  transmission, communication skipping, fitted Golomb parameters) builds
+  its :class:`~repro.optim.optimizers.ControlState` with
+  :func:`~repro.optim.optimizers.init_control`, and lr-schedule-corrected
+  error feedback rescales the carried residual with
+  :func:`~repro.optim.optimizers.rescale_feedback`.
 
 Names not exported here (module-private helpers like
 ``repro.comm.sync._bucketed_sync``) are internal: they can change or
@@ -33,12 +39,15 @@ from repro.core._compressors import REGISTRY, CompressedGrad, make_compressor
 from repro.core.api import (CompressionConfig, TreeStats, compress_leaf,
                             compress_tree, compress_tree_sparse,
                             zeros_like_residual)
-from repro.optim.optimizers import FeedbackState, init_feedback
+from repro.optim.optimizers import (ControlState, FeedbackState,
+                                    init_control, init_feedback,
+                                    rescale_feedback)
 
 __all__ = [
     "CompressionConfig", "TreeStats", "compress_leaf", "compress_tree",
     "compress_tree_sparse", "zeros_like_residual",
     "sync_tree", "SyncStats",
     "FeedbackState", "init_feedback",
+    "ControlState", "init_control", "rescale_feedback",
     "make_compressor", "CompressedGrad", "REGISTRY",
 ]

@@ -202,6 +202,18 @@ def _unpack_bits(words: jax.Array) -> jax.Array:
 # Rice shifts stay inside int32 coordinate arithmetic.
 RICE_MAX_R = 30
 
+# Fitted-parameter header word (wire-format v4, docs/WIRE_FORMAT.md): when a
+# leaf ships a DATA-FITTED Rice parameter, its phase-one counts entry becomes
+# ``(r << RICE_HDR_SHIFT) | used`` — the fitted r rides the high bits of the
+# word the two-phase exchange already moves, so the parameter travels for
+# free. r <= RICE_MAX_R fits in 5 bits (26 + 5 = 31: the sign bit stays
+# clear), and 2^26 words = 256 MB of index stream per layer bounds any
+# realistic used count. Static-parameter counts have zero high bits, so
+# masking with RICE_HDR_USED_MASK is the identity on them — the accounting
+# and padding-zeroing paths apply it unconditionally.
+RICE_HDR_SHIFT = 26
+RICE_HDR_USED_MASK = (1 << RICE_HDR_SHIFT) - 1
+
 
 def rice_cap_words(k_cap: int, d: int, r: int) -> int:
     """int32 words that bound ANY Rice-coded index stream of one layer:
@@ -236,12 +248,28 @@ def rice_encode(vals: jax.Array, idx: jax.Array, d: int, r: int,
     zero-padded past the encoded region.
     """
     svals, sidx = coordinate_order(vals, idx, d, nnz=nnz)
-    k = svals.shape[0]
+    words, used = _rice_pack_gaps(_rice_gaps(sidx, d), r,
+                                  rice_cap_words(svals.shape[0], d, r))
+    return svals, words, used
+
+
+def _rice_gaps(sidx: jax.Array, d: int) -> jax.Array:
+    """Coordinate-ordered index stream -> the gap-1 codes every Rice
+    candidate packs: live slots carry their sorted-coordinate delta minus
+    one, dead slots (sentinel ``d``) code 0."""
     live = sidx < d
     prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), sidx[:-1]])
-    x = jnp.where(live, sidx - prev - 1, 0)      # gap - 1; dead slots code 0
+    return jnp.where(live, sidx - prev - 1, 0)   # gap - 1; dead slots code 0
+
+
+def _rice_pack_gaps(x: jax.Array, r: int,
+                    cap_words: int) -> tuple[jax.Array, jax.Array]:
+    """Pack k gap-1 codes at parameter ``r`` into ``cap_words`` int32 words
+    (the shared body of ``rice_encode`` and the fitted candidate sweep —
+    ``cap_words`` may exceed the minimal capacity, which only widens the
+    zero-padded unary region). Returns ``(words [cap_words], used)``."""
+    k = x.shape[0]
     q = x >> r
-    cap_words = rice_cap_words(k, d, r)
     u_cap = cap_words * WORD_BITS - k * r
     # remainder field: k_cap * r bits at offset 0, LSB-first per code
     if r > 0:
@@ -258,7 +286,60 @@ def rice_encode(vals: jax.Array, idx: jax.Array, d: int, r: int,
     ubits = ((upos < total_unary) & (tmark == 0)).astype(jnp.int32)
     words = _pack_bits(jnp.concatenate([rbits, ubits]))
     used = (jnp.int32(k * r) + total_unary + (WORD_BITS - 1)) // WORD_BITS
-    return svals, words, used.astype(jnp.int32)
+    return words, used.astype(jnp.int32)
+
+
+def rice_fit_cap_words(k_cap: int, d: int, window: tuple[int, ...]) -> int:
+    """Static word capacity of a FITTED Rice stream: the max capacity over
+    the candidate window (the payload must hold whichever candidate the
+    data picks). Padding past the realized stream is zeros and is never
+    charged — realized bytes come from the header's used count."""
+    return max(rice_cap_words(k_cap, d, r) for r in window)
+
+
+def rice_encode_fitted(vals: jax.Array, idx: jax.Array, d: int,
+                       window: tuple[int, ...],
+                       nnz: jax.Array | None = None
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Data-fitted twin of ``rice_encode``: encode the gap stream at every
+    candidate parameter in the static ``window``
+    (repro.core.coding.rice_fit_window) and ship the shortest.
+
+    Returns ``(svals, words [rice_fit_cap_words], header)`` where
+    ``header = (r << RICE_HDR_SHIFT) | used`` — the fitted parameter rides
+    the counts word the two-phase exchange already moves. Ties break to
+    the SMALLEST candidate r (the window is ascending and argmin takes the
+    first minimum), so the choice is deterministic and an all-dead stream
+    always lands on ``window[0]``. The static parameter is always in the
+    window, so the fitted used count never exceeds the static one."""
+    svals, sidx = coordinate_order(vals, idx, d, nnz=nnz)
+    x = _rice_gaps(sidx, d)
+    cap = rice_fit_cap_words(svals.shape[0], d, window)
+    packed = [_rice_pack_gaps(x, r, cap) for r in window]
+    useds = jnp.stack([u for _, u in packed])            # [C]
+    best = jnp.argmin(useds)
+    words = jnp.stack([w for w, _ in packed])[best]
+    r_best = jnp.asarray(window, jnp.int32)[best]
+    header = (r_best << RICE_HDR_SHIFT) | useds[best]
+    return svals, words, header
+
+
+def rice_decode_fitted(words: jax.Array, k_cap: int, d: int,
+                       window: tuple[int, ...],
+                       header: jax.Array) -> jax.Array:
+    """Decode a fitted Rice stream from the shipped header: the receiver
+    runs the (static-shape) decode at every window candidate and selects
+    by the header's r bits — the header is decode-authoritative, nothing
+    else names the parameter. A zeroed header (the skip sentinel) selects
+    r = ``header >> shift`` = 0 over all-zero words, which decodes to the
+    0..k_cap-1 coordinate ramp; every slot carries a zero value there, so
+    the receiver's zero-value masking drops the whole message."""
+    r_sel = (header >> RICE_HDR_SHIFT) & 0x1F
+    out = rice_decode(words, k_cap, d, window[0])
+    for r in window[1:]:
+        out = jnp.where((r_sel == r)[..., None],
+                        rice_decode(words, k_cap, d, r), out)
+    return out
 
 
 def rice_decode(words: jax.Array, k_cap: int, d: int, r: int) -> jax.Array:

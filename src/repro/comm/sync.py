@@ -117,9 +117,9 @@ import jax.numpy as jnp
 from repro.comm import compaction, wire_layout
 from repro.core.api import (CompressionConfig, compress_tree,
                             compress_tree_sparse)
-from repro.core.grouping import chunk_spans
+from repro.core.grouping import chunk_spans, member_row_flags
 from repro.core.sparse import SparseGrad
-from repro.optim.optimizers import FeedbackState
+from repro.optim.optimizers import ControlState, FeedbackState
 
 Axis = str | tuple[str, ...]
 
@@ -136,6 +136,7 @@ class SyncStats:
     density: jax.Array           # realized nnz fraction
     var_ratio: jax.Array         # ||Q(g)||^2/||g||^2, the paper's `var`
     overflow: jax.Array          # coords dropped by fixed-capacity compaction
+    skipped: jax.Array = 0.0     # leaves this worker skipped (adaptive only)
 
 
 def _axis_size(axis: Axis) -> jax.Array:
@@ -245,6 +246,77 @@ def _compaction_drops(items: list, leaves: list) -> list:
     return drops
 
 
+def _strip_prepack(items: list) -> list:
+    """Drop kernel-prepacked STATIC-format RICE streams from sparse items.
+    The pallas output pass bit-packs the rice words at the static parameter
+    ``coding.rice_parameter``; under ``cfg.rice_fitted`` the wire carries
+    the FITTED format (different capacity, header-tagged counts), so the
+    prepack must be discarded and the streams re-encoded by
+    ``wire_layout.pack`` — the compact (values, idx) pair is authoritative
+    either way."""
+    out = []
+    for kind, payload, members in items:
+        if kind == "sparse" and getattr(payload, "rice_words", None) \
+                is not None:
+            payload = dataclasses.replace(payload, rice_words=None,
+                                          rice_used=None)
+        out.append((kind, payload, members))
+    return out
+
+
+def _apply_skip(cfg: CompressionConfig, items: list, skip_flags: list):
+    """LASG-style communication skipping, applied AFTER compression: mask
+    each skipped leaf's rows out of the already-built wire buffers so the
+    exchange ships (and charges) only a 1-word per-row header for them.
+
+    Values are zeroed in place — a zero update contributes exact zeros to
+    the bucket scatter-add, which keeps the sparse wires bit-identical to
+    the dense path's zeroed-q psum. RICE groups are PREPACKED here (via
+    ``wire_layout.pack``, in the fitted format when ``cfg.rice_fitted``)
+    and their word streams and counts masked to zero per skipped row:
+    both backends then ship identical all-zero streams with a zero count,
+    so the realized-byte accounting (4 bytes * count) charges nothing for
+    a skipped row beyond its counts-header word. The static per-row value/
+    index/scale charges the exchanges add are refunded by the returned
+    savings scalar: a skipped non-rice row nets exactly 4 bytes (the skip
+    sentinel word — see docs/WIRE_FORMAT.md), a skipped rice row exactly
+    its counts word.
+
+    Returns ``(items, wire_savings)`` with ``wire_savings`` a traced f32
+    byte total to subtract from the exchange's intra-stage charge.
+    """
+    codec = cfg.scheme().codec
+    scale_b = 4.0 if codec.has_scale else 0.0
+    savings = jnp.asarray(0.0, jnp.float32)
+    out_items = []
+    for kind, payload, members in items:
+        if kind == "dense":
+            # tiny dense-passthrough leaves never skip (their flags are
+            # statically False): one psum carries them regardless
+            out_items.append((kind, payload, members))
+            continue
+        sg = payload
+        lp = wire_layout.plan(sg, fitted=cfg.rice_fitted)
+        mask = member_row_flags(members, skip_flags)          # [rows] bool
+        vals = jnp.where(mask[:, None], jnp.zeros_like(sg.values), sg.values)
+        itemsize = jnp.dtype(sg.values.dtype).itemsize
+        sg2 = dataclasses.replace(sg, values=vals)
+        if lp.layout == "rice":
+            v2d, w2d, nw = wire_layout.pack(sg2, lp)
+            w2d = jnp.where(mask[:, None], 0, w2d)
+            nw = jnp.where(mask, 0, nw)
+            sg2 = dataclasses.replace(sg2, values=v2d, rice_words=w2d,
+                                      rice_used=nw)
+            per_row = float(lp.val_len * itemsize) + scale_b
+        else:
+            per_row = (float(lp.val_len * itemsize + lp.idx_len * 4)
+                       + scale_b - 4.0)
+        savings = savings + (jnp.sum(mask.astype(jnp.float32))
+                             * jnp.float32(per_row))
+        out_items.append((kind, sg2, members))
+    return out_items, savings
+
+
 def _route_span(members, r0: int, n: int, d: int, seg, pieces: dict) -> None:
     """Slice one chunk span's flat reconstruction back to leaves.
 
@@ -349,7 +421,7 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
         packed: dict = {}
         for e in ids:
             sg = items[e][1]
-            lp = wire_layout.plan(sg)
+            lp = wire_layout.plan(sg, fitted=cfg.rice_fitted)
             # [L, val_len], [L, idx_len], [L] realized rice words
             packed[e] = (lp,) + wire_layout.pack(sg, lp) + (
                 jnp.asarray(sg.scale, jnp.float32).reshape(-1)
@@ -409,7 +481,12 @@ def _bucketed_sync(items: list, leaves: list, axis: Axis,
                 gcounts = jax.lax.all_gather(counts_flat, axis,
                                              tiled=False)        # [m, R]
                 wire += float(counts_flat.size * 4)              # the vector
-                wire = wire + 4.0 * jnp.sum(counts_flat).astype(jnp.float32)
+                # fitted counts carry the parameter header in their high
+                # bits (wire-format v4); only the used-word field is
+                # payload. The mask is identity on static-format counts.
+                wire = wire + 4.0 * jnp.sum(
+                    counts_flat
+                    & compaction.RICE_HDR_USED_MASK).astype(jnp.float32)
             else:
                 gcounts = None
             vals_flat = jnp.concatenate(vals_parts)
@@ -577,7 +654,7 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
 
     for i in reversed(sparse_ids):
         sg = items[i][1]
-        lp0 = wire_layout.plan(sg)
+        lp0 = wire_layout.plan(sg, fitted=cfg.rice_fitted)
         wdt = jnp.dtype(sg.values.dtype)
         v2d_full, w2d_full, nw_full = wire_layout.pack(sg, lp0)
         overflow = overflow + jnp.sum(sg.overflow())
@@ -591,7 +668,10 @@ def _overlapped_sync(items: list, leaves: list, axis: Axis,
                 nw = nw_full[r0:r0 + n]
                 parts.append(nw.reshape(-1))                   # counts header
                 wire += float(n * 4)
-                wire = wire + 4.0 * jnp.sum(nw).astype(jnp.float32)
+                # mask off the fitted-parameter header bits (identity on
+                # static-format counts) — only used words are payload
+                wire = wire + 4.0 * jnp.sum(
+                    nw & compaction.RICE_HDR_USED_MASK).astype(jnp.float32)
             else:
                 wire += float(n * lp.idx_len * 4)
             if lp.idx_len:
@@ -737,8 +817,8 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
               data_axis: Axis = "data", pod_axis: str | None = None,
               stacked: Any | None = None,
               key_axes: tuple[str, ...] | None = None,
-              feedback: Any | None = None
-              ) -> tuple[Any, FeedbackState | None, SyncStats]:
+              feedback: Any | None = None,
+              control: ControlState | None = None):
     """THE sync entrypoint: compress local grads per leaf and exchange them
     over the data (and pod) mesh axes, dispatching wire format, exchange
     structure, bucket chunking, and hierarchy from ``cfg`` alone.
@@ -769,6 +849,22 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
     intra-pod average plus the carried pod residual is re-sparsified, the
     second compression's error comes back in ``new_feedback.pod_residual``,
     and nothing is silently dropped at either stage.
+
+    With ``cfg.adaptive`` the caller MUST additionally pass ``control`` —
+    a ``ControlState`` with this worker's leaf-shaped ``last_sent``,
+    params-shaped ``last_avg``, one f32 ``bound`` scalar per leaf, and the
+    scalar ``step`` — and the return gains a fourth element: ``(synced,
+    new_feedback, new_control, stats)``. The adaptive loop (a) transmits
+    the gradient DIFFERENCE ``g - delta_beta * last_sent`` (the receiver
+    closes it with ``delta_beta * last_avg``), (b) SKIPS a leaf's exchange
+    when its delta energy falls under ``skip_tau`` times the tracked EMA
+    bound — the skipped delta (plus the carried residual) folds exactly
+    into the EF residual and the wire charges one sentinel word per
+    skipped row — and
+    (c) under ``cfg.rice_fitted`` ships data-fitted Golomb parameters in
+    the counts header. Every decision is made identically on the dense
+    and sparse wires from the same targets, so dense-vs-gather
+    bit-identity is preserved on every adaptive path.
     """
     data_axes = ((data_axis,) if isinstance(data_axis, str)
                  else tuple(data_axis))
@@ -802,6 +898,19 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
             "mesh axes to fold into the per-worker key) so the pod stage can "
             "derive a data-axis-invariant key from the unfolded base key; "
             "pass key_axes instead of pre-folding the key.")
+    if cfg.adaptive and control is None:
+        raise ValueError(
+            "sync_tree: adaptive=True requires the control state (pass "
+            "control=ControlState(...), built with "
+            "repro.optim.optimizers.init_control and carried through the "
+            "train step); delta transmission against an untracked last-sent "
+            "state would silently drop gradient mass.")
+    if control is not None and not cfg.adaptive:
+        raise ValueError(
+            "sync_tree: control state passed but cfg.adaptive=False — the "
+            "control loop would be a silent no-op. Set "
+            "CompressionConfig(adaptive=True, error_feedback=True) or drop "
+            "the control argument.")
 
     worker_key = _worker_key(key, key_axes)
 
@@ -811,11 +920,62 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
     overflow = jnp.asarray(0, jnp.int32)
     new_pod_res = pod_residual        # pass-through unless the pod stage runs
 
+    # -- adaptive pre-pass: delta transmission + skip decisions -----------
+    send_grads, send_leaves = grads, leaves
+    res_in_leaves = skip_flags = new_bound = None
+    if cfg.adaptive:
+        beta = cfg.delta_beta
+        res_in_leaves = jax.tree_util.tree_flatten(residual)[0]
+        sent_leaves = jax.tree_util.tree_flatten(control.last_sent)[0]
+        bound_leaves = jax.tree_util.tree_flatten(control.bound)[0]
+        if beta:
+            send_leaves = [g - beta * s for g, s in zip(leaves, sent_leaves)]
+            send_grads = jax.tree_util.tree_unflatten(treedef, send_leaves)
+        # per-leaf delta energy, reduced over any extra manual axes (e.g.
+        # the model axis of shard-local sync) so the skip decision and the
+        # bound stay uniform across one leaf's shards
+        stat_axes = tuple(a for a in key_axes
+                          if a not in data_axes and a != pod_axis)
+        warm = control.step > 0       # step 0 primes the bound, never skips
+        do_skip = cfg.skip_tau > 0.0  # static: tau=0 compiles skip out
+        skip_flags, new_bound = [], []
+        for g_send, b in zip(send_leaves, bound_leaves):
+            # the statistic is the DELTA energy ||g - beta*S||^2 alone — the
+            # leaf's new information, LASG-style. The EF residual is delivery
+            # backlog, not news: folding it in would block skipping for the
+            # whole EF warmup (the residual grows monotonically until the
+            # sparse wire catches up with the dense gradient).
+            t32 = g_send.astype(jnp.float32).reshape(-1)
+            sq = jnp.sum(t32 * t32)
+            if stat_axes:
+                sq = jax.lax.psum(sq, stat_axes)
+            b32 = jnp.asarray(b, jnp.float32).reshape(())
+            # step 0 PRIMES the bound at the first observed energy instead
+            # of EMA-ing from zero (which would mute skipping for the first
+            # ~1/(1-decay) steps while the EMA warms up)
+            new_bound.append(jnp.where(
+                warm,
+                jnp.float32(cfg.bound_decay) * b32
+                + jnp.float32(1.0 - cfg.bound_decay) * sq,
+                sq))
+            if do_skip and g_send.size >= cfg.min_leaf_size:
+                skip_flags.append(jnp.logical_and(
+                    warm, sq <= jnp.float32(cfg.skip_tau) * b32))
+            else:   # tiny dense-passthrough leaves never skip
+                skip_flags.append(jnp.zeros((), bool))
+
     wire_inter = 0.0
     if cfg.wire == "dense":
-        q_tree, new_res, stats = compress_tree(cfg, worker_key, grads,
+        q_tree, new_res, stats = compress_tree(cfg, worker_key, send_grads,
                                                residual=residual,
                                                stacked=stacked)
+        if cfg.adaptive:
+            # skipped leaves contribute exact zeros to the psum — the dense
+            # twin of the sparse wire's masked rows
+            q_tree = jax.tree_util.tree_unflatten(treedef, [
+                jnp.where(f, jnp.zeros_like(q), q)
+                for q, f in zip(jax.tree_util.tree_flatten(q_tree)[0],
+                                skip_flags)])
         synced, wire_intra = _sync_leaves_dense(q_tree, data_axis)
         if pod_axis is not None and not cfg.resparsify_pods:
             # hierarchical mean (equal pod sizes), so the per-stage byte
@@ -823,12 +983,28 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
             synced, wire_inter = _sync_leaves_dense(synced, pod_axis)
     else:   # gather | packed (validated at CompressionConfig construction)
         items, new_res, _, stats = compress_tree_sparse(cfg, worker_key,
-                                                        grads,
+                                                        send_grads,
                                                         stacked=stacked,
                                                         residual=residual)
+        if cfg.rice_fitted:
+            items = _strip_prepack(items)
+        skip_savings = None
+        if cfg.adaptive:
+            items, skip_savings = _apply_skip(cfg, items, skip_flags)
         out_leaves, wire_intra, overflow = _exchange_fn(cfg)(items, leaves,
                                                              data_axis, cfg)
+        if skip_savings is not None:
+            wire_intra = wire_intra - skip_savings
         synced = jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+    if cfg.adaptive:
+        # a skipped leaf's WHOLE target (delta + residual) folds into the
+        # residual: Q = 0, so res = target - Q = target, the same op the
+        # compress paths apply — nothing is dropped
+        new_res = jax.tree_util.tree_unflatten(treedef, [
+            jnp.where(f, (g + r).astype(nr.dtype), nr)
+            for nr, g, r, f in zip(jax.tree_util.tree_flatten(new_res)[0],
+                                   send_leaves, res_in_leaves, skip_flags)])
 
     # Algorithm 1 step 7 (optional re-sparsification) -> inter-pod stage.
     # With error feedback the recompression error is carried in the
@@ -861,6 +1037,9 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
                                                            stacked=stacked)
             else:
                 items2 = _compact_items(cfg, synced_leaves, stk_leaves)
+            if cfg.rice_fitted:
+                items2 = _strip_prepack(items2)
+            if not cfg.resparsify_pods:
                 if cfg.error_feedback:
                     # the pod-union of the data-axis workers' coordinates
                     # routinely exceeds one message's k_cap, so the
@@ -878,13 +1057,40 @@ def sync_tree(cfg: CompressionConfig, key: jax.Array, grads: Any,
             synced = jax.tree_util.tree_unflatten(treedef, out_leaves)
             overflow = overflow + ovf2
 
+    new_control = None
+    if cfg.adaptive:
+        if cfg.delta_beta:
+            # close the delta code: the receiver reconstructs against its
+            # tracked EMA of past synced averages (every worker holds an
+            # identical copy, so all workers agree bit-for-bit)
+            beta = cfg.delta_beta
+            synced = jax.tree.map(
+                lambda a, s: (beta * a + s).astype(s.dtype),
+                control.last_avg, synced)
+        # what this worker's wire effectively carried, folded into the
+        # last-sent EMA: S' = beta*S + Q(target) = g + r_in - r_out —
+        # one formula for skipped (Q=0 -> S' = beta*S) and sent rows alike
+        new_control = ControlState(
+            last_sent=jax.tree_util.tree_unflatten(treedef, [
+                (g + r - nr).astype(g.dtype)
+                for g, r, nr in zip(leaves, res_in_leaves,
+                                    jax.tree_util.tree_flatten(new_res)[0])]),
+            last_avg=synced if cfg.delta_beta else control.last_avg,
+            bound=jax.tree_util.tree_unflatten(treedef, new_bound),
+            step=control.step + jnp.int32(1))
+
     new_feedback = (FeedbackState(residual=new_res, pod_residual=new_pod_res)
                     if cfg.error_feedback else None)
-    return synced, new_feedback, SyncStats(
+    out_stats = SyncStats(
         bits=stats.bits, dense_bits=stats.dense_bits,
         wire_bytes=jnp.asarray(wire_intra + wire_inter, jnp.float32),
         wire_bytes_intra=jnp.asarray(wire_intra, jnp.float32),
         wire_bytes_inter=jnp.asarray(wire_inter, jnp.float32),
         density=stats.density, var_ratio=stats.var_ratio,
         overflow=overflow.astype(jnp.float32),
+        skipped=(sum(f.astype(jnp.float32) for f in skip_flags)
+                 if cfg.adaptive else jnp.zeros((), jnp.float32)),
     )
+    if control is not None:
+        return synced, new_feedback, new_control, out_stats
+    return synced, new_feedback, out_stats

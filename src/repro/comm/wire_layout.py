@@ -93,6 +93,8 @@ class LeafPlan:
     val_len: int             # value slots per layer on the wire
     idx_len: int             # int32 index words per layer on the wire
     rice_r: int = 0          # static Golomb-Rice parameter (rice only)
+    fitted: bool = False     # wire-format v4: data-fitted Rice parameter
+    rice_window: tuple = ()  # static candidate parameters (fitted only)
 
     @property
     def block(self) -> int:
@@ -100,12 +102,21 @@ class LeafPlan:
         return self.layers * self.d
 
 
-def plan(sg) -> LeafPlan:
+def plan(sg, fitted: bool = False) -> LeafPlan:
     """The static wire plan for one SparseGrad (layout stamped by the
-    backend; ``coo`` for pre-layout producers, e.g. hand-built buffers)."""
+    backend; ``coo`` for pre-layout producers, e.g. hand-built buffers).
+    ``fitted`` switches RICE leaves to wire-format v4: the Golomb-Rice
+    parameter is fitted per layer per step from the realized index gaps
+    over the static candidate window (``coding.rice_fit_window``) and
+    shipped in the high bits of the phase-one counts word; the payload
+    capacity is the max over the window so the collective shape stays
+    static while realized words only ever undercut the static-parameter
+    encoder's."""
     layers = sg.values.shape[0] if sg.values.ndim == 2 else 1
     layout = sg.layout
     rice_r = 0
+    rice_window: tuple = ()
+    use_fitted = False
     if layout == "coo":
         val_len, idx_len = sg.k_cap, sg.k_cap
     elif layout == "bitmap":
@@ -115,11 +126,18 @@ def plan(sg) -> LeafPlan:
     elif layout == "rice":
         rice_r = coding.rice_parameter(sg.k_cap, sg.d)
         val_len = sg.k_cap
-        idx_len = compaction.rice_cap_words(sg.k_cap, sg.d, rice_r)
+        if fitted:
+            use_fitted = True
+            rice_window = coding.rice_fit_window(sg.k_cap, sg.d)
+            idx_len = compaction.rice_fit_cap_words(sg.k_cap, sg.d,
+                                                    rice_window)
+        else:
+            idx_len = compaction.rice_cap_words(sg.k_cap, sg.d, rice_r)
     else:
         raise ValueError(f"unknown wire layout {layout!r}; have {LAYOUTS}")
     return LeafPlan(layout=layout, layers=layers, d=sg.d, k_cap=sg.k_cap,
-                    val_len=val_len, idx_len=idx_len, rice_r=rice_r)
+                    val_len=val_len, idx_len=idx_len, rice_r=rice_r,
+                    fitted=use_fitted, rice_window=rice_window)
 
 
 def pack(sg, lp: LeafPlan) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -155,6 +173,9 @@ def pack(sg, lp: LeafPlan) -> tuple[jax.Array, jax.Array, jax.Array]:
                     jnp.zeros((0,), jnp.int32), zero)
         srt = nnz if sg.idx_sorted else None
         if lp.layout == "rice":
+            if lp.fitted:
+                return compaction.rice_encode_fitted(vals, idx, lp.d,
+                                                     lp.rice_window, nnz=srt)
             return compaction.rice_encode(vals, idx, lp.d, lp.rice_r,
                                           nnz=srt)
         sv, w = compaction.bitmap_pack(vals, idx, lp.d, nnz=srt)
@@ -191,9 +212,16 @@ def unpack_gathered(lp: LeafPlan, decoded: jax.Array, widx: jax.Array | None,
     if lp.layout == "rice":
         words = widx.reshape(m, lp.layers, lp.idx_len)
         if wcounts is not None:
+            # static counts carry no header bits, so the mask is identity
+            # on them; fitted counts pack (r << RICE_HDR_SHIFT) | used
+            used = wcounts & compaction.RICE_HDR_USED_MASK
             words = jnp.where(jnp.arange(lp.idx_len, dtype=jnp.int32)
-                              < wcounts[..., None], words, 0)
-        sidx = compaction.rice_decode(words, lp.k_cap, lp.d, lp.rice_r)
+                              < used[..., None], words, 0)
+        if lp.fitted:
+            sidx = compaction.rice_decode_fitted(words, lp.k_cap, lp.d,
+                                                 lp.rice_window, wcounts)
+        else:
+            sidx = compaction.rice_decode(words, lp.k_cap, lp.d, lp.rice_r)
         coords = (sidx
                   + (jnp.arange(lp.layers, dtype=jnp.int32) * lp.d)[None, :,
                                                                     None]

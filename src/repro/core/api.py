@@ -106,6 +106,23 @@ class CompressionConfig:
                                      # chunk_spans); the default is the int32
                                      # scatter-index ceiling
     xla_preset: str = "none"         # XLA comm-tuning preset (repro.comm.xla_flags)
+    # adaptive control loop (consumed by repro.comm.sync via ControlState)
+    adaptive: bool = False           # thread ControlState through sync_tree:
+                                     # delta transmission vs the last-sent
+                                     # EMA + LASG-style per-leaf skipping;
+                                     # requires error_feedback (skipped
+                                     # deltas fold into the residual)
+    delta_beta: float = 1.0          # last-sent EMA weight: the wire carries
+                                     # g - beta * last_sent (0 disables delta
+                                     # coding even when adaptive)
+    skip_tau: float = 0.0            # skip a leaf when ||delta + residual||^2
+                                     # <= tau * tracked bound (0 = never skip)
+    bound_decay: float = 0.9         # EMA decay of the per-leaf energy bound
+    rice_fitted: bool = False        # wire-format v4: fit the Golomb-Rice
+                                     # parameter per layer per step and ship
+                                     # it in the phase-one counts header
+    density_gain: float = 1.0        # agspar: rho_eff = clip(gain * s/d, ...)
+    density_floor: float = 0.1       # agspar: rho_eff >= floor * rho
 
     def __post_init__(self):
         if self.wire not in ("dense", "gather", "packed"):
@@ -134,6 +151,40 @@ class CompressionConfig:
             raise ValueError(f"unknown wire layout {self.wire_layout!r} "
                              "(valid: 'auto', 'coo', 'bitmap', 'dense', "
                              "'rice')")
+        if not 0.0 <= self.delta_beta <= 1.0:
+            raise ValueError(f"delta_beta={self.delta_beta} outside [0, 1]; "
+                             "the last-sent EMA weight is a convex mixing "
+                             "coefficient")
+        if self.skip_tau < 0.0:
+            raise ValueError(f"skip_tau={self.skip_tau} is negative; the "
+                             "skip threshold scales a squared norm (valid: "
+                             ">= 0, 0 disables skipping)")
+        if not 0.0 <= self.bound_decay < 1.0:
+            raise ValueError(f"bound_decay={self.bound_decay} outside "
+                             "[0, 1); the energy bound is an EMA and decay "
+                             "1 would never incorporate new steps")
+        if not 0.0 < self.density_gain <= 1.0:
+            raise ValueError(
+                f"density_gain={self.density_gain} outside (0, 1]; gain > 1 "
+                "would let the fitted density exceed the static rho ceiling "
+                "the wire capacity is sized from")
+        if not 0.0 <= self.density_floor <= 1.0:
+            raise ValueError(f"density_floor={self.density_floor} outside "
+                             "[0, 1]; it is a fraction of the static rho")
+        if self.adaptive:
+            if not self.error_feedback:
+                raise ValueError(
+                    "adaptive=True requires error_feedback=True: a skipped "
+                    "leaf's delta and the delta-coding closure both fold "
+                    "into the EF residual; without it the control loop "
+                    "would silently drop gradient mass.")
+            if self.resparsify_pods:
+                raise ValueError(
+                    "adaptive=True with resparsify_pods=True is not "
+                    "supported: the pod-stage recompression re-selects "
+                    "coordinates after the control loop's delta/skip "
+                    "decisions, which breaks the last-sent bookkeeping. "
+                    "Use the single-stage pod sync (resparsify_pods=False).")
         scheme = self.scheme()       # raises on unknown selector/codec/algo
         if self.name.split("+")[0] == "gspar" \
                 and self.algo not in ("greedy", "closed"):
@@ -182,6 +233,12 @@ class CompressionConfig:
         parts.append(f"backend={self.backend}")
         if self.error_feedback:
             parts.append("ef")
+        if self.adaptive:
+            parts.append(f"adaptive(beta={self.delta_beta:g}"
+                         f" tau={self.skip_tau:g}"
+                         f" decay={self.bound_decay:g})")
+        if self.rice_fitted:
+            parts.append("rice_fitted")
         if self.resparsify_pods:
             parts.append("resparsify_pods")
         if self.xla_preset != "none":
@@ -200,7 +257,8 @@ def _resolve_scheme(cfg: CompressionConfig) -> schemes_lib.Scheme:
     return schemes_lib.make_scheme(
         cfg.name, codec=codec, rho=cfg.rho, eps=cfg.eps, algo=cfg.algo,
         num_iters=cfg.num_iters, qsgd_bits=cfg.qsgd_bits,
-        float_bits=cfg.float_bits)
+        float_bits=cfg.float_bits, density_gain=cfg.density_gain,
+        density_floor=cfg.density_floor)
 
 
 @dataclasses.dataclass(frozen=True)

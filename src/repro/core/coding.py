@@ -41,8 +41,9 @@ import numpy as np
 # constant, one rounding rule, shared with repro.comm.compaction so the
 # layout chooser can never charge a different word width than the
 # collective ships (compaction imports only jax — no cycle).
-from repro.comm.compaction import (RICE_MAX_R, WORD_BITS, bitmap_words,
-                                   rice_cap_words)
+from repro.comm.compaction import (RICE_HDR_SHIFT, RICE_HDR_USED_MASK,
+                                   RICE_MAX_R, WORD_BITS, bitmap_words,
+                                   rice_cap_words, rice_fit_cap_words)
 
 # Realized index width on the sparse wires: COO coordinates travel as int32
 # (the bucketed collectives address up to 2^31 coords per wire-dtype group).
@@ -188,6 +189,42 @@ def rice_stream_words(idx, k_cap: int, d: int, r: int | None = None) -> int:
     word-rounded ``rice_stream_bits`` — exactly the encoder's used-word
     count, what phase one of the two-phase exchange reports."""
     return -(-rice_stream_bits(idx, k_cap, d, r) // WORD_BITS)
+
+
+def rice_fit_window(k_cap: int, d: int) -> tuple[int, ...]:
+    """Static candidate set for the DATA-FITTED Golomb-Rice parameter
+    (wire-format v4): the static ``rice_parameter`` plus its neighborhood
+    ``{r_s - 1, r_s, r_s + 1, r_s + 2}``, clipped to [0, RICE_MAX_R] and
+    deduplicated, ascending. The window is part of the wire format —
+    sender and receiver derive it from the trace-time ``(k_cap, d)`` alone
+    and only the CHOICE travels, in the high bits of the counts word
+    (``compaction.RICE_HDR_SHIFT``). Containing r_s guarantees the fitted
+    stream never exceeds the static-parameter one; the asymmetry (+2 vs
+    -1) reflects that clustered index draws (delta gaps far below the
+    geometric mean) reward larger unary savings than uniform draws reward
+    smaller remainders."""
+    r_s = rice_parameter(k_cap, d)
+    return tuple(sorted({min(RICE_MAX_R, max(0, r_s + off))
+                         for off in (-1, 0, 1, 2)}))
+
+
+def rice_fitted_parameter(idx, k_cap: int, d: int) -> int:
+    """The parameter the fitted encoder picks for one realized index set:
+    first-minimum of the realized word counts over the window — the exact
+    off-wire twin of ``compaction.rice_encode_fitted``'s argmin (jnp.argmin
+    also takes the first occurrence over the ascending window)."""
+    window = rice_fit_window(k_cap, d)
+    words = [rice_stream_words(idx, k_cap, d, r) for r in window]
+    return window[words.index(min(words))]
+
+
+def rice_fitted_stream_words(idx, k_cap: int, d: int) -> int:
+    """Realized words of one layer's FITTED Rice stream: the minimum over
+    the candidate window — exactly the used count the fitted encoder's
+    header reports (``header & RICE_HDR_USED_MASK``). Never exceeds
+    ``rice_stream_words`` at the static parameter (r_s is in the window)."""
+    window = rice_fit_window(k_cap, d)
+    return min(rice_stream_words(idx, k_cap, d, r) for r in window)
 
 
 def realized_wire_bits(layout: str, k_cap: int, d: int,

@@ -127,6 +127,20 @@ def chunk_spans(entries, cap: int) -> list[tuple[tuple[int, int, int], ...]]:
     return chunks
 
 
+def member_row_flags(members, leaf_flags):
+    """Broadcast per-leaf scalars to one per-ROW vector of a sparse group's
+    stacked batch: ``members`` is the group's ``((leaf_index, rows), ...)``
+    and ``leaf_flags`` a sequence indexable by leaf index (traced scalars
+    are fine). The adaptive control loop uses this to turn per-leaf skip
+    decisions into per-row masks over the ``[rows, k_cap]`` wire buffers —
+    row order is member order, matching the stack built by
+    ``compress_tree_sparse``."""
+    import jax.numpy as jnp     # kept lazy: the plan itself is array-free
+    parts = [jnp.broadcast_to(jnp.asarray(leaf_flags[i]), (rows,))
+             for i, rows in members]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
 def leaf_rows(shape: tuple[int, ...], stacked: bool) -> tuple[int, int]:
     """(rows, d) decomposition of one leaf — the same rule the per-leaf
     loop applied: a scan-stacked leaf with a real leading axis compresses

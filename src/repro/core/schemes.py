@@ -83,6 +83,60 @@ class GsparSelector:
 
 
 @dataclasses.dataclass(frozen=True)
+class AdaptiveGsparSelector:
+    """Per-step, per-leaf DATA-FITTED density (Deng et al., "Sparse and
+    Adaptive Stochastic Gradient"): the density target is refit each step
+    from the gradient's participation ratio s = ||g||_1^2 / ||g||_2^2 —
+    the effective number of significant coordinates, a one-pass statistic
+    the selection kernels already reduce (p-sum and l2 of pass 1). A heavy-
+    tailed step (small s) sends fewer coordinates than the static budget;
+    a flat one saturates at it. ``rho`` stays the static CEILING: the wire
+    capacity, bucket shapes, and collective layouts are sized from it at
+    trace time, so the fitted density only ever moves realized bytes
+    downward — never shapes. The fitted target is
+
+        rho_eff = clip(gain * s / d,  floor * rho,  rho)
+
+    and the kept set follows the paper's Algorithm 3 greedy probabilities
+    at that traced target (``sparsify.greedy_probabilities`` accepts a
+    traced rho). gain <= 1 guarantees rho_eff <= rho, which is what the
+    matched-density bench gate (scripts/check_bench.py) leans on."""
+    rho: float = 0.1
+    num_iters: int = 2
+    density_gain: float = 1.0
+    density_floor: float = 0.1
+
+    name = "agspar"
+    tail_implicit = True     # same index-only coding regime as gspar
+
+    def rho_fitted(self, g: jax.Array) -> jax.Array:
+        """The traced density target for one leaf (scalar f32)."""
+        a = jnp.abs(g.astype(jnp.float32).reshape(-1))
+        d = a.shape[0]
+        l1 = jnp.sum(a)
+        l2 = jnp.sum(a * a)
+        s = jnp.where(l2 > 0, l1 * l1 / jnp.where(l2 > 0, l2, 1.0), 0.0)
+        lo = jnp.float32(self.density_floor * self.rho)
+        hi = jnp.float32(self.rho)
+        return jnp.clip(jnp.float32(self.density_gain) * s / jnp.float32(d),
+                        lo, hi)
+
+    def probabilities(self, g: jax.Array) -> jax.Array:
+        return sparsify.greedy_probabilities(g, self.rho_fitted(g),
+                                             self.num_iters)
+
+    def sample(self, key: jax.Array, g: jax.Array, p: jax.Array) -> jax.Array:
+        return sparsify.sparsify(key, g, p)
+
+    def capacity(self, d: int, slack: float) -> int:
+        # sized from the static ceiling: rho_eff <= rho by construction
+        return _capacity_for(d, self.rho, slack)
+
+    def realized_bits(self, q, p, d: int, vb: float) -> jax.Array:
+        return coding.realized_coding_bits(q, p, vb)
+
+
+@dataclasses.dataclass(frozen=True)
 class UnispSelector:
     """Uniform sampling baseline: p_i = rho everywhere (unbiased)."""
     rho: float = 0.1
@@ -261,7 +315,8 @@ class Scheme:
 # Registry / composition parsing
 # ---------------------------------------------------------------------------
 
-SELECTOR_NAMES = ("gspar", "unisp", "topk", "bernoulli", "identity")
+SELECTOR_NAMES = ("gspar", "agspar", "unisp", "topk", "bernoulli",
+                  "identity")
 
 # legacy monolithic scheme names -> (selector, codec-or-None) aliases.
 # codec None means "use the configured/default codec".
@@ -300,9 +355,14 @@ def parse_composition(name: str, qsgd_bits: int = 4) -> tuple[str, str | None]:
 
 
 def make_selector(name: str, *, rho: float = 0.1, eps: float = 1.0,
-                  algo: str = "greedy", num_iters: int = 2):
+                  algo: str = "greedy", num_iters: int = 2,
+                  density_gain: float = 1.0, density_floor: float = 0.1):
     if name == "gspar":
         return GsparSelector(rho=rho, eps=eps, algo=algo, num_iters=num_iters)
+    if name == "agspar":
+        return AdaptiveGsparSelector(rho=rho, num_iters=num_iters,
+                                     density_gain=density_gain,
+                                     density_floor=density_floor)
     if name == "unisp":
         return UnispSelector(rho=rho)
     if name == "topk":
@@ -316,7 +376,9 @@ def make_selector(name: str, *, rho: float = 0.1, eps: float = 1.0,
 
 def make_scheme(name: str, *, codec: str | None = None, rho: float = 0.1,
                 eps: float = 1.0, algo: str = "greedy", num_iters: int = 2,
-                qsgd_bits: int = 4, float_bits: int = 32) -> Scheme:
+                qsgd_bits: int = 4, float_bits: int = 32,
+                density_gain: float = 1.0,
+                density_floor: float = 0.1) -> Scheme:
     """Build a Scheme from a composition name plus parameters. ``codec``
     (explicit field) and a ``+codec`` suffix in ``name`` must agree."""
     sel_name, parsed_codec = parse_composition(name, qsgd_bits=qsgd_bits)
@@ -328,5 +390,7 @@ def make_scheme(name: str, *, codec: str | None = None, rho: float = 0.1,
     codec_name = parsed_codec or codec or "f32"
     return Scheme(
         selector=make_selector(sel_name, rho=rho, eps=eps, algo=algo,
-                               num_iters=num_iters),
+                               num_iters=num_iters,
+                               density_gain=density_gain,
+                               density_floor=density_floor),
         codec=codecs_lib.get(codec_name, float_bits=float_bits))

@@ -105,8 +105,14 @@ def _probe_variant(cfg: "tf.ModelConfig", periods: int) -> "tf.ModelConfig":
 
 def _build_lowered(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
                    compressor, rho, shard_local_sync=True,
-                   backend="reference", exchange="sync"):
-    """Lower one step for the given (possibly probe-modified) config."""
+                   backend="reference", exchange="sync",
+                   comp_overrides=None):
+    """Lower one step for the given (possibly probe-modified) config.
+
+    ``comp_overrides`` merges extra CompressionConfig kwargs (the adaptive
+    control-loop knobs, wire_layout, ...) into the train-step config; with
+    ``error_feedback``/``adaptive`` the lowered step also takes the
+    FeedbackState/ControlState arguments (shape structs, never allocated)."""
     seq, global_batch, kind = registry.SHAPES[shape_name]
     param_rules = build_rules(spec, multi_pod, for_state=(mode == "fsdp"))
     state_rules = build_rules(spec, multi_pod, for_state=True)
@@ -123,21 +129,38 @@ def _build_lowered(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
             batch_sds = specs_lib.train_batch_structs(cfg, shape_name, mesh,
                                                       multi_pod)
             key_sds = jax.eval_shape(lambda: jax.random.key(0))
-            comp = CompressionConfig(name=compressor, rho=rho, wire=wire,
-                                     backend=backend, exchange=exchange,
-                                     min_leaf_size=4096)
+            comp_kw = dict(name=compressor, rho=rho, wire=wire,
+                           backend=backend, exchange=exchange,
+                           min_leaf_size=4096)
+            comp_kw.update(comp_overrides or {})
+            comp = CompressionConfig(**comp_kw)
             if mode == "compressed":
                 step = step_lib.make_compressed_train_step(
                     cfg, comp, opt, mesh, act_rules, multi_pod=multi_pod,
                     shard_local_sync=shard_local_sync)
+                state_args = []
+                if comp.error_feedback:
+                    state_args.append(jax.eval_shape(
+                        lambda: step_lib.init_compressed_feedback(
+                            cfg, comp, mesh, multi_pod)))
+                if comp.adaptive:
+                    state_args.append(jax.eval_shape(
+                        lambda: step_lib.init_compressed_control(
+                            cfg, comp, mesh, multi_pod)))
             else:
-                step7 = dataclasses.replace(comp, wire="dense")
+                # the fsdp baseline prices the dense step-7 recompression
+                # only — no EF/adaptive state threading here
+                step7 = dataclasses.replace(comp, wire="dense",
+                                            adaptive=False, skip_tau=0.0,
+                                            rice_fitted=False,
+                                            error_feedback=False)
                 step = step_lib.make_fsdp_train_step(cfg, step7, opt, mesh,
                                                      act_rules)
+                state_args = []
             # donate params/opt_state like launch.train: the dryrun cost
             # model should price the schedule the real launcher compiles
             lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
-                params_sds, opt_sds, batch_sds, key_sds)
+                params_sds, opt_sds, *state_args, batch_sds, key_sds)
         elif kind == "prefill":
             cache_sds, _ = specs_lib.cache_structs(cfg, shape_name,
                                                    state_rules, mesh)
@@ -166,14 +189,15 @@ def _build_lowered(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
 
 def _probe_costs(cfg, spec, shape_name, mesh, multi_pod, mode, wire,
                  compressor, rho, shard_local_sync=True,
-                 backend="reference", exchange="sync"):
+                 backend="reference", exchange="sync", comp_overrides=None):
     """(flops, bytes, collective_bytes) per extra period + 1-period base."""
     out = []
     for periods in (1, 2):
         pcfg = _probe_variant(cfg, periods)
         lowered, _ = _build_lowered(pcfg, spec, shape_name, mesh, multi_pod,
                                     mode, wire, compressor, rho,
-                                    shard_local_sync, backend, exchange)
+                                    shard_local_sync, backend, exchange,
+                                    comp_overrides)
         with jax.set_mesh(mesh):
             compiled = lowered.compile()
         r = analysis.analyze(compiled)
@@ -189,7 +213,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                train_mode: str | None = None, probe: bool = True,
                attn_impl: str | None = None, q_chunk: int | None = None,
                kv_chunk: int | None = None, shard_local_sync: bool = True,
-               backend: str = "reference", exchange: str = "sync"):
+               backend: str = "reference", exchange: str = "sync",
+               comp_overrides: dict | None = None):
     """Lower+compile one (arch, shape, mesh) combination. Returns a record."""
     spec = registry.get(arch)
     if shape_name not in spec.shapes:
@@ -217,7 +242,7 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
     lowered, params_sds = _build_lowered(cfg, spec, shape_name, mesh,
                                          multi_pod, mode, wire, compressor,
                                          rho, shard_local_sync, backend,
-                                         exchange)
+                                         exchange, comp_overrides)
     record["lower_s"] = round(time.time() - t0, 1)
     t1 = time.time()
     with jax.set_mesh(mesh):
@@ -234,7 +259,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
         t2 = time.time()
         base, delta = _probe_costs(cfg, spec, shape_name, mesh, multi_pod,
                                    mode, wire, compressor, rho,
-                                   shard_local_sync, backend, exchange)
+                                   shard_local_sync, backend, exchange,
+                                   comp_overrides)
         record["probe_s"] = round(time.time() - t2, 1)
         n_extra = cfg.num_periods - 1
         flops = base[0] + n_extra * delta[0]
@@ -293,6 +319,15 @@ def main(argv=None):
     ap.add_argument("--exchange", default="sync",
                     choices=["sync", "overlap"],
                     help="sparse collective structure (see repro.comm.sync)")
+    ap.add_argument("--wire-layout", default="auto",
+                    choices=["auto", "coo", "bitmap", "dense", "rice"])
+    ap.add_argument("--adaptive", action="store_true",
+                    help="lower the adaptive control-loop step (implies "
+                         "--error-feedback state threading)")
+    ap.add_argument("--delta-beta", type=float, default=1.0)
+    ap.add_argument("--skip-tau", type=float, default=0.0)
+    ap.add_argument("--bound-decay", type=float, default=0.9)
+    ap.add_argument("--rice-fitted", action="store_true")
     ap.add_argument("--xla-preset", default="none",
                     choices=["none", "async", "latency_hiding", "overlap"],
                     help="XLA comm-tuning preset; consumed by the module-top "
@@ -315,9 +350,18 @@ def main(argv=None):
             print(f"{arch:28s} {shape:12s} {st}")
         return 0
 
+    comp_overrides = {"wire_layout": args.wire_layout}
+    if args.adaptive:
+        comp_overrides.update(adaptive=True, error_feedback=True,
+                              delta_beta=args.delta_beta,
+                              skip_tau=args.skip_tau,
+                              bound_decay=args.bound_decay)
+    if args.rice_fitted:
+        comp_overrides["rice_fitted"] = True
     comp = CompressionConfig(name=args.compressor, rho=args.rho,
                              wire=args.wire, backend=args.backend,
-                             exchange=args.exchange, min_leaf_size=4096)
+                             exchange=args.exchange, min_leaf_size=4096,
+                             **comp_overrides)
     print(f"compression: {comp.describe()}", file=sys.stderr)
     rec = lower_pair(args.arch, args.shape, args.multi_pod, wire=args.wire,
                      compressor=args.compressor, rho=args.rho,
@@ -325,8 +369,10 @@ def main(argv=None):
                      probe=not args.no_probe, attn_impl=args.attn_impl,
                      q_chunk=args.q_chunk, kv_chunk=args.kv_chunk,
                      shard_local_sync=not args.global_sync,
-                     backend=args.backend, exchange=args.exchange)
+                     backend=args.backend, exchange=args.exchange,
+                     comp_overrides=comp_overrides)
     rec["xla_preset"] = args.xla_preset
+    rec["adaptive"] = bool(args.adaptive)
     print(json.dumps(rec, indent=2, default=str))
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

@@ -23,7 +23,7 @@ from repro.dist import sharding as shd
 from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.models import transformer as tf
 from repro.models.common import split_params
-from repro.optim.optimizers import adam, init_feedback, sgd
+from repro.optim.optimizers import adam, init_control, init_feedback, sgd
 from repro.train import step as step_lib
 
 
@@ -74,6 +74,23 @@ def main(argv=None):
     ap.add_argument("--error-feedback", action="store_true",
                     help="carry the per-worker compression residual "
                          "(memory: one params-sized buffer per worker)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="adaptive compression control loop (compressed "
+                         "mode, requires --error-feedback): per-step delta "
+                         "transmission against the last-sent state, "
+                         "LASG-style communication skipping, per-leaf EMA "
+                         "energy bounds")
+    ap.add_argument("--delta-beta", type=float, default=1.0,
+                    help="fraction of the last-sent EMA subtracted before "
+                         "compression (0 disables delta coding)")
+    ap.add_argument("--skip-tau", type=float, default=0.0,
+                    help="skip a leaf's exchange when its delta energy is "
+                         "<= tau * EMA bound (0 disables skipping)")
+    ap.add_argument("--bound-decay", type=float, default=0.9,
+                    help="EMA decay of the per-leaf skip bound")
+    ap.add_argument("--rice-fitted", action="store_true",
+                    help="data-fitted Golomb-Rice parameter per leaf, "
+                         "shipped in the counts-header word (rice layout)")
     ap.add_argument("--resparsify-pods", action="store_true",
                     help="re-sparsify the inter-pod stage (Alg.1 step 7) "
                          "on multi-pod meshes; with --error-feedback the "
@@ -131,6 +148,11 @@ def main(argv=None):
                              exchange=args.exchange,
                              overlap_bucket_bytes=args.overlap_bucket_bytes,
                              xla_preset=args.xla_preset,
+                             adaptive=args.adaptive,
+                             delta_beta=args.delta_beta,
+                             skip_tau=args.skip_tau,
+                             bound_decay=args.bound_decay,
+                             rice_fitted=args.rice_fitted,
                              min_leaf_size=1024)
     print(f"compression: {comp.describe()}")
     ef_state = None
@@ -146,12 +168,23 @@ def main(argv=None):
                                      num_pods=num_pods)
         else:
             ef_state = init_feedback(params)
+    ctl_state = None
+    if comp.adaptive:
+        if mode != "compressed":
+            raise SystemExit("--adaptive requires the compressed train mode")
+        ctl_state = init_control(params,
+                                 step_lib.mesh_workers(mesh, multi_pod))
     with jax.set_mesh(mesh):
         # Donate params/opt_state (and the EF residual, which the grouped
         # compression path consumes into fresh stacked buffers) — the train
         # loop rebinds all of them every step, so XLA can reuse their HBM
         # for the step's outputs instead of holding both copies live.
-        donate = (0, 1, 2) if ef_state is not None else (0, 1)
+        if ctl_state is not None:
+            donate = (0, 1, 2, 3)
+        elif ef_state is not None:
+            donate = (0, 1, 2)
+        else:
+            donate = (0, 1)
         if mode == "compressed":
             train_step = jax.jit(step_lib.make_compressed_train_step(
                 cfg, comp, opt, mesh, rules, multi_pod=multi_pod),
@@ -165,7 +198,10 @@ def main(argv=None):
         for step_i in range(args.steps):
             key, k_data, k_q = jax.random.split(key, 3)
             batch = token_batch(k_data, cfg.vocab, args.batch, args.seq)
-            if ef_state is not None:
+            if ctl_state is not None:
+                params, opt_state, ef_state, ctl_state, metrics = train_step(
+                    params, opt_state, ef_state, ctl_state, batch, k_q)
+            elif ef_state is not None:
                 params, opt_state, ef_state, metrics = train_step(
                     params, opt_state, ef_state, batch, k_q)
             else:
@@ -179,6 +215,8 @@ def main(argv=None):
                             f" var x{m['var_ratio']:.2f}"
                             f" msg_bits {m['bits']:.3g}"
                             f" (dense {m['dense_bits']:.3g})")
+                if ctl_state is not None:
+                    msg += f" skipped {m.get('skipped', 0.0):.1f}"
                 print(msg, flush=True)
         dt = time.time() - t0
         print(f"done: {args.steps} steps in {dt:.1f}s "
@@ -190,9 +228,14 @@ def main(argv=None):
             # the EF residual is training state: restarting without it
             # re-biases the first compressed step after restore
             tree["ef"] = ef_state
+        if ctl_state is not None:
+            # ditto the control state: dropping it resets delta coding to a
+            # cold full send and re-primes the skip bounds
+            tree["ctl"] = ctl_state
         checkpoint.save(args.checkpoint, tree,
                         extra={"arch": args.arch, "steps": args.steps,
-                               "error_feedback": bool(ef_state is not None)})
+                               "error_feedback": bool(ef_state is not None),
+                               "adaptive": bool(ctl_state is not None)})
         print(f"checkpoint -> {args.checkpoint}")
     return 0
 

@@ -84,6 +84,67 @@ def init_feedback(params: Any, num_workers: int | None = None,
         pod_residual=pod_res)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ControlState:
+    """Adaptive compression control loop state (CompressionConfig.adaptive):
+    what ``sync_tree`` needs to transmit gradient DIFFERENCES against the
+    last-sent state (LASG / Qsparse-local-SGD-style) and to skip a leaf's
+    exchange outright when its delta energy falls under a tracked bound.
+    Carried by the train step alongside FeedbackState and checkpointed with
+    it — dropping it on restart resets delta coding to a cold full send.
+
+    ``last_sent`` mirrors the stacked per-worker residual layout: the EMA
+    of what each worker's wire actually carried (per-worker axis W).
+    ``last_avg`` is params-shaped: the matching EMA of the synced average,
+    the receiver-side closure of delta coding (every worker holds an
+    identical copy, so no worker axis). ``bound`` tracks one f32 energy
+    scalar per leaf per worker (leaves of shape [W]); ``step`` is a scalar
+    int32 — step 0 primes the bound and never skips.
+    """
+    last_sent: Any
+    last_avg: Any
+    bound: Any
+    step: Any
+
+
+def init_control(params: Any, num_workers: int) -> ControlState:
+    """Zero control state for the compressed-step layout (see
+    ``init_feedback``): delta coding starts from last_sent = 0, i.e. the
+    first adaptive step transmits the full gradient."""
+    if num_workers < 1:
+        raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+    return ControlState(
+        last_sent=jax.tree.map(
+            lambda p: jnp.zeros((num_workers,) + tuple(p.shape), p.dtype),
+            params),
+        last_avg=jax.tree.map(jnp.zeros_like, params),
+        bound=jax.tree.map(
+            lambda p: jnp.zeros((num_workers,), jnp.float32), params),
+        step=jnp.zeros((), jnp.int32))
+
+
+def rescale_feedback(fb: FeedbackState, lr_prev, lr_now) -> FeedbackState:
+    """Momentum-corrected error feedback (Karimireddy et al. 2019): the
+    residual lives in the lr-scaled update domain, so when the schedule
+    moves the step size between steps the carried residual must be
+    rescaled by ``lr_prev / lr_now`` before compression — otherwise the
+    correction is applied at the wrong magnitude. A constant schedule
+    rescales by exactly 1.0 (bit-exact no-op); lr_now == 0 keeps the
+    residual unchanged (there is no update domain to map into)."""
+    prev = jnp.asarray(lr_prev, jnp.float32)
+    now = jnp.asarray(lr_now, jnp.float32)
+    ratio = jnp.where(now != 0, prev / jnp.where(now != 0, now, 1.0), 1.0)
+
+    def scale(x):
+        return (x.astype(jnp.float32) * ratio).astype(x.dtype)
+
+    return FeedbackState(
+        residual=jax.tree.map(scale, fb.residual),
+        pod_residual=(jax.tree.map(scale, fb.pod_residual)
+                      if fb.pod_residual is not None else None))
+
+
 def _tree_cast(tree, dtype):
     return jax.tree.map(lambda x: x.astype(dtype), tree)
 

@@ -32,7 +32,9 @@ from repro.core.api import CompressionConfig, compress_tree
 from repro.dist import sharding as shd
 from repro.models import transformer
 from repro.models.common import split_params
-from repro.optim.optimizers import FeedbackState, Optimizer, init_feedback
+from repro.optim.optimizers import (ControlState, FeedbackState, Optimizer,
+                                    init_control, init_feedback,
+                                    rescale_feedback)
 from repro.train.loss import lm_loss, shift_targets
 
 
@@ -89,6 +91,21 @@ def init_compressed_feedback(cfg: transformer.ModelConfig,
                          num_pods=num_pods)
 
 
+def init_compressed_control(cfg: transformer.ModelConfig,
+                            comp: CompressionConfig, mesh,
+                            multi_pod: bool = False) -> ControlState:
+    """Zero ControlState for the adaptive compressed step: last_sent and
+    the per-leaf bound in the stacked per-worker layout (leading axis =
+    mesh_workers(mesh)), last_avg params-shaped. Carried and checkpointed
+    alongside the FeedbackState."""
+    if not comp.adaptive:
+        raise ValueError("init_compressed_control with adaptive=False")
+    param_sds = jax.eval_shape(lambda k: transformer.init_model(k, cfg),
+                               jax.random.key(0))
+    vals, _ = split_params(param_sds)
+    return init_control(vals, num_workers=mesh_workers(mesh, multi_pod))
+
+
 def make_compressed_train_step(cfg: transformer.ModelConfig,
                                comp: CompressionConfig,
                                opt: Optimizer,
@@ -96,7 +113,8 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                                rules: dict,
                                multi_pod: bool = False,
                                var_adaptive_lr: bool = False,
-                               shard_local_sync: bool = True) -> Callable:
+                               shard_local_sync: bool = True,
+                               lr_schedule: Callable | None = None) -> Callable:
     """Algorithm 1 as one jittable step: (params, opt_state, batch, key) ->
     (params, opt_state, metrics).
 
@@ -119,7 +137,20 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
     every gradient across the model axis (measured 465 GB/step/device on
     gemma2-27b train_4k — see EXPERIMENTS.md section Perf iter C2).
     Per-shard sparsification keeps the estimator unbiased (each shard is an
-    independent Q over its coordinates)."""
+    independent Q over its coordinates).
+
+    With ``comp.adaptive`` the step carries a ControlState after the
+    FeedbackState: (params, opt_state, ef_state, ctl_state, batch, key) ->
+    (params, opt_state, ef_state, ctl_state, metrics). Build the initial
+    state with ``init_compressed_control``; its leaves ride the same
+    stacked per-worker specs as the residual (last_avg params-shaped, the
+    bound one scalar per worker per leaf).
+
+    lr_schedule: the optimizer's step-size schedule, if any. With error
+    feedback this enables the momentum-corrected variant (Karimireddy et
+    al. 2019): the carried residual lives in the lr-scaled update domain,
+    so it is rescaled by lr_prev/lr_now before each sync. A constant
+    schedule (or lr_schedule=None) is a bit-exact no-op."""
     loss_fn = make_loss_fn(cfg)
     manual = ("pod", "data") if multi_pod else ("data",)
     inner_rules = _strip_manual(rules, manual)
@@ -186,7 +217,10 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                 wire_bytes_inter=jax.lax.psum(stats.wire_bytes_inter, "model"),
                 density=jax.lax.pmean(stats.density, "model"),
                 var_ratio=jax.lax.pmean(stats.var_ratio, "model"),
-                overflow=jax.lax.psum(stats.overflow, "model"))
+                overflow=jax.lax.psum(stats.overflow, "model"),
+                # the skip decision is model-uniform (sync_tree psums the
+                # delta energy over the extra manual axes), so mean == value
+                skipped=jax.lax.pmean(stats.skipped, "model"))
         return jax.tree.map(lambda s: jax.lax.pmean(s, manual), stats)
 
     def sync_fn(grads_stacked, key):
@@ -206,6 +240,30 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                                           pod_axis=pod_axis, stacked=stacked,
                                           key_axes=key_axes, feedback=res)
         return (synced, jax.tree.map(lambda r: r[None], new_fb.residual),
+                _reduce_stats(stats))
+
+    def sync_fn_adaptive(grads_stacked, res_stacked, ls_stacked, la,
+                         b_stacked, stepc, key):
+        # last_sent and the bound ride the stacked per-worker layout like
+        # the residual; last_avg is params-shaped (every worker holds an
+        # identical copy — the receiver side of delta coding); step is a
+        # replicated scalar
+        grads = jax.tree.map(lambda g: g[0], grads_stacked)
+        res = jax.tree.map(lambda r: r[0], res_stacked)
+        ctl = ControlState(
+            last_sent=jax.tree.map(lambda s: s[0], ls_stacked),
+            last_avg=la,
+            bound=jax.tree.map(lambda x: x[0], b_stacked),
+            step=stepc)
+        synced, new_fb, new_ctl, stats = sync_tree(
+            comp, key, grads, data_axis="data", pod_axis=pod_axis,
+            stacked=stacked, key_axes=key_axes, feedback=res, control=ctl)
+        return (synced,
+                jax.tree.map(lambda r: r[None], new_fb.residual),
+                jax.tree.map(lambda s: s[None], new_ctl.last_sent),
+                new_ctl.last_avg,
+                jax.tree.map(lambda x: x[None], new_ctl.bound),
+                new_ctl.step,
                 _reduce_stats(stats))
 
     def sync_fn_hier_ef(grads_stacked, res_stacked, pod_res_stacked, key):
@@ -234,7 +292,19 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
     pod_res_specs = jax.tree.map(
         lambda s: P("pod", *tuple(s)) if shard_local_sync else P("pod"),
         grad_specs, is_leaf=lambda t: isinstance(t, P))
-    if hier_ef:
+    # per-leaf [W] bound scalars: sharded over the worker axes, replicated
+    # over model (the skip decision is uniform across one leaf's shards)
+    bound_specs = jax.tree.map(lambda s: P(worker_prefix), grad_specs,
+                               is_leaf=lambda t: isinstance(t, P))
+    if comp.adaptive:
+        sync_sharded = jax.shard_map(
+            sync_fn_adaptive, mesh=mesh,
+            in_specs=(sync_in_specs, sync_in_specs, sync_in_specs,
+                      sync_out_specs, bound_specs, P(), P()),
+            out_specs=(sync_out_specs, sync_in_specs, sync_in_specs,
+                       sync_out_specs, bound_specs, P(), P()),
+            axis_names=sync_axes, check_vma=False)
+    elif hier_ef:
         sync_sharded = jax.shard_map(
             sync_fn_hier_ef, mesh=mesh,
             in_specs=(sync_in_specs, sync_in_specs, pod_res_specs, P()),
@@ -260,8 +330,22 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                    "var_ratio": stats.var_ratio, "wire_bytes": stats.wire_bytes,
                    "wire_bytes_intra": stats.wire_bytes_intra,
                    "wire_bytes_inter": stats.wire_bytes_inter,
-                   "overflow": stats.overflow, "dense_bits": stats.dense_bits}
+                   "overflow": stats.overflow, "dense_bits": stats.dense_bits,
+                   "skipped": stats.skipped}
         return new_params, new_opt, metrics
+
+    def _maybe_rescale(ef_state, opt_state):
+        # Karimireddy et al. 2019: the residual was accumulated under the
+        # PREVIOUS step's lr — map it into the current step's update domain
+        # before compressing. opt.update at count t applies lr_schedule(t+1),
+        # so entering update number t the last applied lr was lr_schedule(t)
+        # (at t == 0 there is no previous step and the residual is zero).
+        if lr_schedule is None:
+            return ef_state
+        t = opt_state["step"]
+        lr_now = lr_schedule(t + 1)
+        lr_prev = jnp.where(t > 0, lr_schedule(jnp.maximum(t, 1)), lr_now)
+        return rescale_feedback(ef_state, lr_prev, lr_now)
 
     def train_step(params, opt_state, batch, key):
         loss, grads_stacked = grad_sharded(params, batch)
@@ -270,6 +354,7 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
 
     def train_step_ef(params, opt_state, ef_state, batch, key):
         loss, grads_stacked = grad_sharded(params, batch)
+        ef_state = _maybe_rescale(ef_state, opt_state)
         grads, new_res, stats = sync_sharded(grads_stacked,
                                              ef_state.residual, key)
         new_params, new_opt, metrics = _finish(loss, grads, stats,
@@ -278,6 +363,7 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
 
     def train_step_hier_ef(params, opt_state, ef_state, batch, key):
         loss, grads_stacked = grad_sharded(params, batch)
+        ef_state = _maybe_rescale(ef_state, opt_state)
         grads, new_res, new_pod_res, stats = sync_sharded(
             grads_stacked, ef_state.residual, ef_state.pod_residual, key)
         new_params, new_opt, metrics = _finish(loss, grads, stats,
@@ -286,6 +372,24 @@ def make_compressed_train_step(cfg: transformer.ModelConfig,
                 FeedbackState(residual=new_res, pod_residual=new_pod_res),
                 metrics)
 
+    def train_step_adaptive(params, opt_state, ef_state, ctl_state, batch,
+                            key):
+        loss, grads_stacked = grad_sharded(params, batch)
+        ef_state = _maybe_rescale(ef_state, opt_state)
+        grads, new_res, new_ls, new_la, new_b, new_step, stats = sync_sharded(
+            grads_stacked, ef_state.residual, ctl_state.last_sent,
+            ctl_state.last_avg, ctl_state.bound, ctl_state.step, key)
+        new_params, new_opt, metrics = _finish(loss, grads, stats,
+                                               opt_state, params)
+        return (new_params, new_opt, FeedbackState(residual=new_res),
+                ControlState(last_sent=new_ls, last_avg=new_la, bound=new_b,
+                             step=new_step),
+                metrics)
+
+    if comp.adaptive:
+        # adaptive forbids resparsify_pods (config validation), so the
+        # hier-ef combination cannot arise here
+        return train_step_adaptive
     if hier_ef:
         return train_step_hier_ef
     return train_step_ef if ef else train_step

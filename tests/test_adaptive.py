@@ -1,0 +1,170 @@
+"""Adaptive compression control loop: the convergence-vs-bytes
+regression harness (the PR-10 acceptance bar).
+
+Convex logistic regression on 8 fake data-parallel workers, identical
+data and identical step budget for both configs:
+
+  * STATIC baseline — the committed gspar@1% gather/rice reference:
+    unbiased 1%-sampling, no error feedback, static Golomb parameter.
+  * ADAPTIVE — the full control loop: contractive top-k@1% under error
+    feedback, per-step delta transmission against the last-sent EMA
+    (``delta_beta=1``), LASG-style communication skipping
+    (``skip_tau=0.7`` of the per-leaf EMA energy bound), and the
+    data-fitted Golomb-Rice parameter on the wire.
+
+The adaptive run must ship STRICTLY fewer cumulative wire bytes (<= 95%
+of static) at equal-or-better final loss, and must actually exercise the
+skip path (skips > 0). The adaptive side is fully deterministic (top-k
+never samples), so the margin is stable; the static side samples, and
+the assertions clear its observed seed spread with margin (finals
+0.469-0.474 across seeds vs adaptive 0.4646; bytes ratio ~0.86 vs the
+0.95 gate).
+
+The harness prints the loss/bytes curves for EXPERIMENTS.md.
+
+The problem is built so the control loop has something to control:
+heavy-tailed feature scales (power-law exponent -0.8) concentrate
+gradient energy on a few coordinates — top-k captures most of the
+energy per step while unbiased 1%-sampling spends its budget uniformly
+— and a deterministic rotating minibatch staggers the per-leaf delta
+energies so skips fire at different steps for different leaves.
+"""
+from dist_harness import run_with_devices
+
+_HARNESS = """
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.api import (CompressionConfig, ControlState, init_control,
+                       init_feedback, sync_tree)
+
+W = 8
+SIZES = (512, 768, 512, 256)           # 4 leaves, one under min_leaf_size*4
+D = sum(SIZES)
+N_PER = 64                             # samples per worker
+BATCH = 16                             # rotating minibatch
+STEPS = 60
+LR = 1.0
+
+kx, kw, kn = jax.random.split(jax.random.key(42), 3)
+# heavy-tailed feature scales: gradient energy concentrates on the strong
+# features, so contractive top-k captures most of it per step while
+# unbiased 1%-sampling spends capacity uniformly
+scale = (1.0 + jnp.arange(D)) ** -0.8
+scale = scale / jnp.linalg.norm(scale) * jnp.sqrt(jnp.float32(D))
+X = jax.random.normal(kx, (W, N_PER, D)) * scale / jnp.sqrt(D)
+w_true = jax.random.normal(kw, (D,)) * 3.0
+logits = jnp.einsum("wnd,d->wn", X, w_true)
+y = (logits + 0.25 * jax.random.normal(kn, logits.shape) > 0
+     ).astype(jnp.float32)
+
+def split_w(w):
+    out, off = {}, 0
+    for i, s in enumerate(SIZES):
+        out[f"l{i}"] = w[off:off + s]; off += s
+    return out
+
+def join_w(tree):
+    return jnp.concatenate([tree[f"l{i}"] for i in range(len(SIZES))])
+
+def local_grad(w_tree, Xw, yw):
+    w = join_w(w_tree)
+    p = jax.nn.sigmoid(Xw @ w)
+    return split_w(Xw.T @ (p - yw) / Xw.shape[0])
+
+def full_loss(w_tree):
+    z = X.reshape(-1, D) @ join_w(w_tree)
+    yy = y.reshape(-1)
+    return jnp.mean(jnp.logaddexp(0.0, z) - yy * z)
+
+mesh = jax.make_mesh((8,), ("data",))
+
+def make_step(cfg, ef, adaptive):
+    def body(w_tree, Xw, yw, t, res, ls, la, b, step, key):
+        # deterministic rotating minibatch: staggers per-leaf delta
+        # energies across steps, reproducible across runs
+        start = (t * BATCH) % N_PER
+        Xl = jax.lax.dynamic_slice_in_dim(Xw[0], start, BATCH, 0)
+        yl = jax.lax.dynamic_slice_in_dim(yw[0], start, BATCH, 0)
+        g = local_grad(w_tree, Xl, yl)
+        if adaptive:
+            fb = jax.tree.map(lambda r: r[0], res)
+            ctl = ControlState(last_sent=jax.tree.map(lambda s: s[0], ls),
+                               last_avg=la,
+                               bound=jax.tree.map(lambda x: x[0], b),
+                               step=step)
+            synced, nfb, nctl, stats = sync_tree(cfg, key, g,
+                                                 data_axis="data",
+                                                 feedback=fb, control=ctl)
+            return (synced,
+                    jax.tree.map(lambda r: r[None], nfb.residual),
+                    jax.tree.map(lambda s: s[None], nctl.last_sent),
+                    nctl.last_avg,
+                    jax.tree.map(lambda x: x[None], nctl.bound),
+                    nctl.step,
+                    jax.lax.psum(stats.wire_bytes, "data"),
+                    jax.lax.psum(stats.skipped, "data"))
+        if ef:
+            fb = jax.tree.map(lambda r: r[0], res)
+            synced, nfb, stats = sync_tree(cfg, key, g, data_axis="data",
+                                           feedback=fb)
+            return (synced, jax.tree.map(lambda r: r[None], nfb.residual),
+                    ls, la, b, step,
+                    jax.lax.psum(stats.wire_bytes, "data"), 0.0 * stats.bits)
+        synced, _, stats = sync_tree(cfg, key, g, data_axis="data")
+        return (synced, res, ls, la, b, step,
+                jax.lax.psum(stats.wire_bytes, "data"), 0.0 * stats.bits)
+    return jax.jit(jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P("data"), P("data"), P(), P("data"), P("data"),
+                  P(), P("data"), P(), P()),
+        out_specs=(P(), P("data"), P("data"), P(), P("data"), P(), P(),
+                   P()),
+        axis_names={"data"}, check_vma=False))
+
+def run(cfg, label, ef=False, adaptive=False, seed=7):
+    params = split_w(jnp.zeros((D,)))
+    res = init_feedback(params, num_workers=W).residual
+    ctl = init_control(params, num_workers=W)
+    ls, la, b, stp = ctl.last_sent, ctl.last_avg, ctl.bound, ctl.step
+    step_fn = make_step(cfg, ef, adaptive)
+    tot, losses, bytes_curve, skips = 0.0, [], [], 0.0
+    key = jax.random.key(seed)
+    with jax.set_mesh(mesh):
+        for t in range(STEPS):
+            key, ks = jax.random.split(key)
+            out = step_fn(params, X, y, jnp.int32(t), res, ls, la, b, stp,
+                          ks)
+            synced, res, ls, la, b, stp, wb, sk = out
+            params = jax.tree.map(lambda p, s: p - LR * s, params, synced)
+            tot += float(wb); skips += float(sk)
+            losses.append(float(full_loss(params)))
+            bytes_curve.append(tot)
+    print(f"{label}: final={losses[-1]:.5f} bytes={tot:,.0f} "
+          f"skips={skips:.0f}")
+    print(f"{label} loss curve:  "
+          + " ".join(f"{l:.4f}" for l in losses[::6]))
+    print(f"{label} bytes curve: "
+          + " ".join(f"{bc:,.0f}" for bc in bytes_curve[::6]))
+    return losses[-1], tot, skips
+
+base = dict(rho=0.01, wire="gather", wire_layout="rice",
+            backend="reference", min_leaf_size=64, exchange="sync")
+static_loss, static_bytes, _ = run(
+    CompressionConfig(name="gspar", **base), "static")
+ad_loss, ad_bytes, ad_skips = run(
+    CompressionConfig(name="topk", error_feedback=True, adaptive=True,
+                      delta_beta=1.0, skip_tau=0.7, bound_decay=0.9,
+                      rice_fitted=True, **base),
+    "adaptive", ef=True, adaptive=True)
+
+assert ad_bytes <= 0.95 * static_bytes, (ad_bytes, static_bytes)
+assert ad_loss <= static_loss + 1e-3, (ad_loss, static_loss)
+assert ad_skips > 0, "the skip path never fired"
+print("OK")
+"""
+
+
+def test_adaptive_fewer_bytes_equal_or_better_loss():
+    out = run_with_devices(_HARNESS, n_devices=8, timeout=900)
+    assert "OK" in out
+    print(out)  # loss/bytes curves, captured for EXPERIMENTS.md via -s

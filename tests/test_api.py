@@ -161,3 +161,148 @@ with jax.set_mesh(mesh):
 print("OK")
 """)
     assert "OK" in out
+
+
+_ADAPTIVE_PRELUDE = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.api import (CompressionConfig, ControlState, FeedbackState,
+                       sync_tree)
+
+W = 8
+SIZES = {"a": 512, "b": 256}
+mesh = jax.make_mesh((W,), ("data",))
+rng = np.random.default_rng(11)
+gs = {k: jnp.asarray(rng.standard_normal((W, d)), jnp.float32)
+      for k, d in SIZES.items()}
+res0 = {k: jnp.asarray(rng.standard_normal((W, d)) * 0.1, jnp.float32)
+        for k, d in SIZES.items()}
+ls0 = {k: jnp.asarray(rng.standard_normal((W, d)) * 0.5, jnp.float32)
+       for k, d in SIZES.items()}
+la0 = {k: jnp.asarray(rng.standard_normal(d) * 0.5, jnp.float32)
+       for k, d in SIZES.items()}
+
+def run(cfg, bounds, step=1):
+    '''One adaptive sync on the 8-worker mesh; per-leaf skip bounds are
+    uniform across workers so every worker takes the same branch.'''
+    b0 = {k: jnp.full((W,), v, jnp.float32) for k, v in bounds.items()}
+    def f(g, r, s, b):
+        ctl = ControlState(
+            last_sent=jax.tree.map(lambda x: x[0], s), last_avg=la0,
+            bound=jax.tree.map(lambda x: x[0], b), step=jnp.int32(step))
+        fb = FeedbackState(residual=jax.tree.map(lambda x: x[0], r))
+        synced, nfb, nctl, stats = sync_tree(
+            cfg, jax.random.key(5), jax.tree.map(lambda x: x[0], g),
+            data_axis="data", feedback=fb, control=ctl)
+        return (synced,
+                jax.tree.map(lambda x: x[None], nfb.residual),
+                jax.tree.map(lambda x: x[None], nctl.last_sent),
+                stats.skipped, jnp.reshape(stats.wire_bytes, (1,)))
+    with jax.set_mesh(mesh):
+        return jax.jit(jax.shard_map(
+            f, mesh=mesh,
+            in_specs=(P("data"),) * 4,
+            out_specs=(P(), P("data"), P("data"), P(), P("data")),
+            axis_names={"data"}, check_vma=False))(gs, res0, ls0, b0)
+
+AD = dict(name="topk", rho=0.05, min_leaf_size=8, backend="reference",
+          error_feedback=True, adaptive=True, delta_beta=1.0,
+          skip_tau=1.0, bound_decay=0.9)
+"""
+
+
+def test_adaptive_skip_absorbed_exactly_by_ef():
+    """A skipped leaf's whole target (delta + carried residual) must land
+    in the EF residual BIT-EXACTLY (residual == (g - beta*last_sent) +
+    r_in, the same float32 ops the send path runs), its last_sent must
+    decay to exactly beta*last_sent, and the mixed-skip sync must satisfy
+    the float64 recovery identity of the dense two-stage reference:
+    synced == beta*last_avg + mean_w(send_w + r_w - r_new_w) — with the
+    skipped leaf's worker terms contributing exactly zero mass."""
+    out = run_with_devices(_ADAPTIVE_PRELUDE + """
+cfg = CompressionConfig(wire="gather", **AD)
+# leaf "a" forced to SKIP (infinite bound), leaf "b" forced to SEND
+synced, r_new, ls_new, skipped, _ = run(cfg, {"a": 1e30, "b": 0.0})
+assert float(skipped) == 1.0, float(skipped)
+
+send = {k: np.asarray(gs[k]) - np.asarray(ls0[k]) for k in SIZES}
+# skipped leaf: residual and last-sent are exact, not approximate
+np.testing.assert_array_equal(
+    np.asarray(r_new["a"]), send["a"] + np.asarray(res0["a"]))
+# S' = g + r_in - r_out, the one update formula for skipped and sent
+# rows alike: bit-exact when replayed with the same float32 ops (a
+# skipped row's S' lands within an ulp of beta*last_sent, not ON it)
+np.testing.assert_array_equal(
+    np.asarray(ls_new["a"]),
+    (np.asarray(gs["a"]) + np.asarray(res0["a"])) - np.asarray(r_new["a"]))
+# sent leaf really shipped something: its residual differs from the
+# all-skip absorption
+assert not np.array_equal(np.asarray(r_new["b"]),
+                          send["b"] + np.asarray(res0["b"]))
+# float64 recovery identity across BOTH leaves (dense two-stage twin):
+# the target is a float32 quantity (the kernel computes send + r_in in
+# f32), the ACCOUNTING of what the wire carried is exact in f64
+for k in SIZES:
+    target = (send[k] + np.asarray(res0[k])).astype(np.float64)
+    carried = target - np.asarray(r_new[k], np.float64)
+    expect = np.asarray(la0[k], np.float64) + carried.mean(axis=0)
+    np.testing.assert_allclose(np.asarray(synced[k], np.float64), expect,
+                               rtol=1e-6, atol=1e-6, err_msg=k)
+    if k == "a":
+        assert np.abs(carried).max() == 0.0   # skip carried zero mass
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_adaptive_skip_all_bit_identical_to_local_step():
+    """A forced skip-all step must be bit-identical to a pure local step
+    under BOTH exchange structures: the wire carries only sentinels, so
+    the synced tree is exactly beta*last_avg (the receiver's closure of a
+    zero exchange), every worker's residual absorbs its whole target
+    exactly, and sync-vs-overlap agree bit-for-bit on all outputs."""
+    out = run_with_devices(_ADAPTIVE_PRELUDE + """
+outs = {}
+for exchange in ("sync", "overlap"):
+    cfg = CompressionConfig(wire="gather", exchange=exchange, **AD)
+    synced, r_new, ls_new, skipped, wb = run(cfg, {"a": 1e30, "b": 1e30})
+    assert float(skipped) == 2.0, (exchange, float(skipped))
+    for k in SIZES:
+        np.testing.assert_array_equal(np.asarray(synced[k]),
+                                      np.asarray(la0[k]))   # local step
+        np.testing.assert_array_equal(
+            np.asarray(r_new[k]),
+            np.asarray(gs[k]) - np.asarray(ls0[k]) + np.asarray(res0[k]))
+        np.testing.assert_array_equal(
+            np.asarray(ls_new[k]),
+            (np.asarray(gs[k]) + np.asarray(res0[k]))
+            - np.asarray(r_new[k]))          # S' = g + r_in - r_out
+    outs[exchange] = (synced, r_new, ls_new, np.asarray(wb))
+for a, b in zip(jax.tree.leaves(outs["sync"]),
+                jax.tree.leaves(outs["overlap"])):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_adaptive_dense_vs_gather_bit_identical():
+    """The acceptance bar on the adaptive path: every control decision
+    (delta coding, skip flags, EF absorption, last-sent update) is made
+    upstream of the wire from the same targets, so the gather wire must
+    stay bit-identical to the dense psum on the reference backend — in a
+    MIXED skip/send step, not just the degenerate all-skip one."""
+    out = run_with_devices(_ADAPTIVE_PRELUDE + """
+bounds = {"a": 1e30, "b": 0.0}
+dense = run(CompressionConfig(wire="dense", **AD), bounds)
+for layout in ("coo", "rice"):
+    gather = run(CompressionConfig(wire="gather", wire_layout=layout,
+                                   rice_fitted=(layout == "rice"), **AD),
+                 bounds)
+    # synced, residual, last_sent, skipped — everything but wire_bytes
+    for a, b in zip(jax.tree.leaves(dense[:4]),
+                    jax.tree.leaves(gather[:4])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("OK")
+""")
+    assert "OK" in out

@@ -339,3 +339,63 @@ class TestFeedbackState:
         for a, b in zip(jax.tree.leaves(fs), jax.tree.leaves(back["ef"])):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         assert checkpoint.load_meta(path)["error_feedback"] is True
+
+
+# ---------------------------------------------------------------------------
+# Momentum-corrected error feedback (Karimireddy et al. 2019)
+# ---------------------------------------------------------------------------
+
+class TestMomentumCorrectedEF:
+    """The carried residual lives in the lr-scaled update domain: when the
+    schedule moves the step size, ``rescale_feedback`` maps it by
+    lr_prev / lr_now before compression (the train step applies it via
+    ``make_compressed_train_step(..., lr_schedule=...)``)."""
+
+    def test_constant_schedule_is_bit_exact_noop(self):
+        from repro.optim.optimizers import rescale_feedback
+        fb = FeedbackState(residual=_grad_tree(21),
+                           pod_residual=_grad_tree(22))
+        out = rescale_feedback(fb, 3e-4, 3e-4)
+        for a, b in zip(jax.tree.leaves(fb), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_ratio_scaling_and_zero_lr_guard(self):
+        from repro.optim.optimizers import rescale_feedback
+        fb = FeedbackState(residual=_grad_tree(23))
+        out = rescale_feedback(fb, 0.2, 0.1)          # lr halved -> x2
+        for a, b in zip(jax.tree.leaves(fb.residual),
+                        jax.tree.leaves(out.residual)):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32) * np.float32(2.0), np.asarray(b))
+        assert out.pod_residual is None
+        frozen = rescale_feedback(fb, 0.1, 0.0)       # no update domain
+        for a, b in zip(jax.tree.leaves(fb.residual),
+                        jax.tree.leaves(frozen.residual)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("name", ["topk", "gspar"])
+    def test_rescaled_residual_keeps_dense_vs_gather_bit_identity(self,
+                                                                  name):
+        """The rescale happens strictly upstream of compression, so the
+        dense and gather wires must see the SAME rescaled residual and
+        stay bit-identical through it — the momentum correction cannot
+        open a wire-dependent code path."""
+        from repro.optim.optimizers import rescale_feedback
+        grads = _grad_tree(24)
+        r1 = jax.tree.map(
+            lambda g: (g * 0.3).astype(g.dtype), _grad_tree(25))
+        key = jax.random.key(31)
+        fb = rescale_feedback(FeedbackState(residual=r1), 0.5, 0.125)
+        q_d, res_d, _ = compress_tree(_cfg(name, "dense"), key, grads,
+                                      residual=fb.residual, stacked=STACKED)
+        _, res_g, _, _ = compress_tree_sparse(_cfg(name, "gather"), key,
+                                              grads, stacked=STACKED,
+                                              residual=fb.residual)
+        for a, b in zip(jax.tree.leaves(res_d), jax.tree.leaves(res_g)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the x4 rescale really changed the compression input
+        q_plain, _, _ = compress_tree(_cfg(name, "dense"), key, grads,
+                                      residual=r1, stacked=STACKED)
+        assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(jax.tree.leaves(q_d),
+                                   jax.tree.leaves(q_plain)))
